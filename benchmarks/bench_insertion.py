@@ -1,0 +1,40 @@
+"""Paper Figure 3: average per-model auto-insertion time vs lineage-graph size.
+
+Larger graphs are built by replicating the G2 pool (the paper's method)."""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from benchmarks.pools import g2_adaptation
+from repro.core import LineageGraph
+from repro.core.auto import auto_insert
+
+
+def run(scales=(1, 2, 4)) -> List[Dict]:
+    rows = []
+    for scale in scales:
+        pool, _, _ = g2_adaptation(scale=scale)
+        g = LineageGraph()
+        t_per_model = []
+        for name, artifact in pool:
+            t0 = time.perf_counter()
+            auto_insert(g, artifact, name)
+            t_per_model.append(time.perf_counter() - t0)
+        rows.append({"n_models": len(pool),
+                     "avg_insert_s": sum(t_per_model) / len(t_per_model),
+                     "max_insert_s": max(t_per_model)})
+    return rows
+
+
+def main():
+    rows = run()
+    print(f"{'n_models':>9} {'avg_insert_s':>13} {'max_insert_s':>13}")
+    for r in rows:
+        print(f"{r['n_models']:9d} {r['avg_insert_s']:13.3f} {r['max_insert_s']:13.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Storage-kernel microbenchmarks + analytic TPU roofline for each kernel.
+
+Wall-times here are the CPU oracle path (the production CPU fallback);
+the Pallas kernels are validated in interpret mode (tests) and characterized
+analytically for TPU v5e: all three kernels are pure HBM-streaming
+(arithmetic intensity << 1 FLOP/byte), so the roofline bound is bytes/819GB/s.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+HBM_BW = 819e9
+
+SIZES = [(1 << 20,), (1 << 24,)]  # 4MB, 64MB fp32 tensors
+
+
+def _time(fn, *args, reps=5) -> float:
+    fn(*args)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run() -> List[Dict]:
+    rows = []
+    rng = np.random.default_rng(0)
+    for (n,) in SIZES:
+        p2 = jnp.asarray(rng.normal(size=n), jnp.float32)
+        p1 = p2 + jnp.asarray(rng.normal(scale=1e-4, size=n) *
+                              (rng.random(n) < 0.3), jnp.float32)
+
+        t = _time(lambda a, b: ops.delta_quantize(a, b, backend="ref")[0], p1, p2)
+        bytes_moved = n * 4 * 3  # read p1, p2; write q
+        rows.append({"kernel": "delta_quantize", "n": n, "cpu_s": t,
+                     "tpu_roofline_s": bytes_moved / HBM_BW,
+                     "bytes": bytes_moved})
+
+        q, _ = ops.delta_quantize(p1, p2, backend="ref")
+        t = _time(lambda a, b: ops.dequant_apply(a, b, backend="ref"), p1, q)
+        rows.append({"kernel": "dequant_apply", "n": n, "cpu_s": t,
+                     "tpu_roofline_s": bytes_moved / HBM_BW,
+                     "bytes": bytes_moved})
+
+        t = _time(lambda a: ops.fingerprint(a, backend="ref"), p1)
+        rows.append({"kernel": "fingerprint", "n": n, "cpu_s": t,
+                     "tpu_roofline_s": n * 4 / HBM_BW, "bytes": n * 4})
+
+        # fused snapshot (§Perf-C): delta+quantize+fingerprint, int8 out
+        t = _time(lambda a, b: ops.snapshot_fused(a, b, backend="ref")[0],
+                  p1, p2)
+        fused_bytes = n * (4 + 4 + 1)   # read p1+p2, write int8 q
+        rows.append({"kernel": "snapshot_fused", "n": n, "cpu_s": t,
+                     "tpu_roofline_s": fused_bytes / HBM_BW,
+                     "bytes": fused_bytes})
+    return rows
+
+
+def main():
+    rows = run()
+    print(f"{'kernel':16} {'elems':>9} {'cpu_ms':>9} {'tpu_bound_us':>13} "
+          f"{'MB':>7}")
+    for r in rows:
+        print(f"{r['kernel']:16} {r['n']:9d} {r['cpu_s']*1e3:9.2f} "
+              f"{r['tpu_roofline_s']*1e6:13.1f} {r['bytes']/1e6:7.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Roofline table from the dry-run artifact (experiments/dryrun.json).
+
+Prints, per (arch x shape x mesh): the three roofline terms, dominant
+bottleneck, MODEL_FLOPS / HLO_FLOPs usefulness ratio, and per-device HBM
+fit — the §Roofline deliverable, derivable on demand from the cached sweep.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+DEFAULT_PATH = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                            "dryrun.json")
+
+
+def load(path: str = DEFAULT_PATH) -> Dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def rows(path: str = DEFAULT_PATH, mesh: str = "single") -> List[Dict]:
+    data = load(path)
+    out = []
+    for key, r in sorted(data.items()):
+        if r.get("status") == "skipped":
+            if key.endswith(mesh):
+                out.append({"arch": r["arch"], "shape": r["shape"],
+                            "status": "skipped", "reason": r["reason"]})
+            continue
+        if r.get("status") != "ok" or not key.endswith(mesh):
+            continue
+        rt = r["roofline"]
+        out.append({
+            "arch": r["arch"], "shape": r["shape"], "status": "ok",
+            "compute_s": rt["compute"], "memory_s": rt["memory"],
+            "collective_s": rt["collective"], "dominant": rt["dominant"],
+            "bound_s": rt["bound_s"],
+            "useful_ratio": r["useful_flops_ratio"],
+            "roofline_frac": rt["compute"] / rt["bound_s"],
+            "hbm_gb": (r["memory_analysis"]["peak_bytes_estimate"] or 0) / 2**30,
+            "compile_s": r["compile_s"],
+        })
+    return out
+
+
+def main(path: str = DEFAULT_PATH):
+    table = rows(path)
+    print(f"{'arch':24} {'shape':12} {'compute_s':>10} {'memory_s':>10} "
+          f"{'coll_s':>9} {'dominant':>10} {'rl_frac':>8} {'useful':>7} {'HBM_GB':>7}")
+    for r in table:
+        if r["status"] == "skipped":
+            print(f"{r['arch']:24} {r['shape']:12} SKIP: {r['reason'][:60]}")
+            continue
+        print(f"{r['arch']:24} {r['shape']:12} {r['compute_s']:10.4f} "
+              f"{r['memory_s']:10.4f} {r['collective_s']:9.4f} "
+              f"{r['dominant']:>10} {r['roofline_frac']:8.3f} "
+              f"{r['useful_ratio']:7.3f} {r['hbm_gb']:7.2f}")
+    return table
+
+
+if __name__ == "__main__":
+    main()

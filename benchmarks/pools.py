@@ -1,0 +1,170 @@
+"""Synthetic lineage-graph pools mirroring the paper's G1-G5 (Table 3).
+
+Each generator returns (pool [(name, artifact)], gold_parents {child: parent},
+graph_type). Derivations reproduce the paper's regimes deterministically:
+
+  G1'  HF-style pool: several unrelated roots + finetuned/head-swapped
+       derivatives (bert/roberta/albert/distilbert analogue)
+  G2'  adaptation: one MLM root, task models, perturbed-data versions
+  G3'  federated learning: rounds of client updates averaged into globals
+  G4'  edge specialization: magnitude pruning at increasing sparsity
+  G5'  multi-task learning: task models sharing 98% of parameters exactly
+
+Models are chain MLPs at a configurable scale (default ~1.6 MB/model) so the
+full Table-4 matrix runs in minutes on one CPU core; ratios are driven by the
+same delta statistics as the paper's (sparse finetune deltas, pruned zeros,
+shared MTL trunks).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core import LayerGraph, LayerNode, ModelArtifact
+
+Pool = List[Tuple[str, ModelArtifact]]
+
+
+def base_model(seed: int, n_layers: int = 6, d: int = 256, head_dim: int = 8,
+               prefix: str = "L", model_type: str = "toy") -> ModelArtifact:
+    rng = np.random.default_rng(seed)
+    layers, params = [], {}
+    for i in range(n_layers):
+        layers.append(LayerNode(f"{prefix}{i}", "linear",
+                                params={"w": ((d, d), "float32")}))
+        params[f"{prefix}{i}/w"] = rng.normal(size=(d, d)).astype(np.float32)
+    layers.append(LayerNode("head", "linear",
+                            params={"w": ((d, head_dim), "float32")}))
+    params["head/w"] = rng.normal(size=(d, head_dim)).astype(np.float32)
+    return ModelArtifact(LayerGraph.chain(layers), params, model_type=model_type)
+
+
+def finetune(parent: ModelArtifact, seed: int, scale=5e-5, density=0.3,
+             freeze_frac=0.0) -> ModelArtifact:
+    rng = np.random.default_rng(seed)
+    keys = list(parent.params)
+    frozen = set(keys[:int(len(keys) * freeze_frac)])
+
+    def f(k, v):
+        if k in frozen:
+            return v
+        mask = rng.random(v.shape) < density
+        return (v + mask * rng.normal(scale=scale, size=v.shape)).astype(v.dtype)
+    return parent.map_params(f)
+
+
+def reinit_head(parent: ModelArtifact, seed: int) -> ModelArtifact:
+    rng = np.random.default_rng(seed)
+    return parent.replace_params({
+        "head/w": rng.normal(size=parent.params["head/w"].shape).astype(np.float32)})
+
+
+def prune(parent: ModelArtifact, sparsity: float) -> ModelArtifact:
+    def f(k, v):
+        kth = np.quantile(np.abs(v), sparsity)
+        return np.where(np.abs(v) < kth, 0.0, v).astype(v.dtype)
+    return parent.map_params(f)
+
+
+def average(models: List[ModelArtifact]) -> ModelArtifact:
+    out = models[0].map_params(
+        lambda k, v: np.mean([m.params[k] for m in models], axis=0).astype(v.dtype))
+    return out
+
+
+# ---------------------------------------------------------------------------
+
+def g1_hf_pool(scale: int = 1, **kw) -> Tuple[Pool, Dict[str, str], str]:
+    """Unrelated roots + derivatives, like the HuggingFace download pool."""
+    pool: Pool = []
+    gold: Dict[str, str] = {}
+    for fam, (seed, d) in {"bert": (10, 256), "roberta": (20, 256),
+                           "albert": (30, 192), "distil": (40, 128)}.items():
+        root = base_model(seed=seed, d=d, prefix=f"{fam}_")
+        pool.append((fam, root))
+        gold[fam] = None
+        for i in range(2 * scale):
+            child = finetune(reinit_head(root, seed=seed + i), seed=seed + 50 + i,
+                             scale=1e-4, density=0.15, freeze_frac=0.3)
+            name = f"{fam}-task{i}"
+            pool.append((name, child))
+            gold[name] = fam
+    return pool, gold, "huggingface"
+
+
+def g2_adaptation(scale: int = 1, n_tasks: int = 5, n_versions: int = 2,
+                  **kw) -> Tuple[Pool, Dict[str, str], str]:
+    root = base_model(seed=0)
+    pool: Pool = [("mlm", root)]
+    gold: Dict[str, str] = {"mlm": None}
+    for rep in range(scale):
+        for t in range(n_tasks):
+            name = f"task{t}_r{rep}"
+            m = finetune(reinit_head(root, seed=100 + t), seed=200 + t + rep,
+                         density=0.2)
+            pool.append((name, m))
+            gold[name] = "mlm"
+            prev, prev_m = name, m
+            for v in range(n_versions):
+                vname = f"{name}@v{v + 2}"
+                prev_m = finetune(prev_m, seed=300 + t * 10 + v, density=0.1)
+                pool.append((vname, prev_m))
+                gold[vname] = prev
+                prev = vname
+    return pool, gold, "adaptation"
+
+
+def g3_federated(rounds: int = 5, clients: int = 4, **kw
+                 ) -> Tuple[Pool, Dict[str, str], str]:
+    global_m = base_model(seed=0)
+    pool: Pool = [("global_r0", global_m)]
+    gold: Dict[str, str] = {"global_r0": None}
+    for r in range(1, rounds + 1):
+        locals_ = []
+        for c in range(clients):
+            m = finetune(global_m, seed=r * 100 + c, scale=2e-4, density=0.4)
+            name = f"client{c}_r{r}"
+            pool.append((name, m))
+            gold[name] = f"global_r{r - 1}"
+            locals_.append(m)
+        global_m = average(locals_)
+        pool.append((f"global_r{r}", global_m))
+        gold[f"global_r{r}"] = f"client0_r{r}"  # any client is a valid parent
+    return pool, gold, "federated"
+
+
+def g4_pruning(**kw) -> Tuple[Pool, Dict[str, str], str]:
+    pool: Pool = []
+    gold: Dict[str, str] = {}
+    for fam, seed, d in (("resnet", 0, 256), ("densenet", 1, 192),
+                         ("mobilenet", 2, 128)):
+        root = base_model(seed=seed, d=d, prefix=f"{fam}_")
+        pool.append((fam, root))
+        gold[fam] = None
+        prev_name, prev = fam, root
+        for s in (0.3, 0.5, 0.7, 0.9):
+            m = prune(prev, sparsity=s)
+            m = finetune(m, seed=seed + int(s * 10), scale=1e-4, density=0.05)
+            name = f"{fam}-sp{int(s * 100)}"
+            pool.append((name, m))
+            gold[name] = prev_name
+            prev_name, prev = name, m
+    return pool, gold, "pruning"
+
+
+def g5_mtl(n_tasks: int = 9, **kw) -> Tuple[Pool, Dict[str, str], str]:
+    """98% shared parameters: identical trunks, task-specific heads."""
+    root = base_model(seed=0)
+    pool: Pool = [("mlm", root)]
+    gold: Dict[str, str] = {"mlm": None}
+    for t in range(n_tasks):
+        m = reinit_head(root, seed=500 + t)
+        pool.append((f"mtl{t}", m))
+        gold[f"mtl{t}"] = "mlm"
+    return pool, gold, "mtl"
+
+
+GRAPHS = {"G1": g1_hf_pool, "G2": g2_adaptation, "G3": g3_federated,
+          "G4": g4_pruning, "G5": g5_mtl}

@@ -1,0 +1,82 @@
+"""Benchmark harness entry: one function per paper table/figure.
+
+Prints a ``name,us_per_call,derived`` CSV summary line per benchmark plus
+each benchmark's own table. Usage: PYTHONPATH=src python -m benchmarks.run
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def _csv(name: str, us: float, derived: str) -> None:
+    print(f"CSV,{name},{us:.1f},{derived}")
+
+
+def main() -> None:
+    sys.path.insert(0, ".")
+    from benchmarks import (bench_autoconstruct, bench_compression,
+                            bench_functionality, bench_insertion,
+                            bench_kernels)
+
+    print("=" * 72)
+    print("Table 4 — compression ratio / accuracy delta / runtime")
+    print("=" * 72)
+    t0 = time.perf_counter()
+    rows = bench_compression.main()
+    lzma_rows = [r for r in rows if r["technique"] == "MGit (LZMA + Hash)"]
+    best = max(lzma_rows, key=lambda r: r["ratio"])
+    _csv("table4_compression", (time.perf_counter() - t0) * 1e6 / max(len(rows), 1),
+         f"best_ratio={best['ratio']:.2f}@{best['graph']}")
+
+    print("=" * 72)
+    print("Figure 3 — auto-insertion scaling")
+    print("=" * 72)
+    t0 = time.perf_counter()
+    rows = bench_insertion.main()
+    _csv("fig3_insertion", rows[-1]["avg_insert_s"] * 1e6,
+         f"n={rows[-1]['n_models']}")
+
+    print("=" * 72)
+    print("§6.1 — automated graph construction accuracy")
+    print("=" * 72)
+    t0 = time.perf_counter()
+    rows = bench_autoconstruct.main()
+    g1 = [r for r in rows if r["graph"] == "G1"]
+    _csv("g1_autoconstruct", (time.perf_counter() - t0) * 1e6,
+         f"paper={g1[0]['accuracy']:.3f},improved={g1[-1]['accuracy']:.3f}")
+
+    print("=" * 72)
+    print("§6.4 — bisect + update cascade")
+    print("=" * 72)
+    rows = bench_functionality.main()
+    _csv("bisect", rows[0]["bisect_s"] * 1e6,
+         f"probe_speedup={rows[0]['probe_speedup']:.1f}x")
+    _csv("cascade", rows[1]["cascade_s"] * 1e6,
+         f"models={rows[1]['created']}")
+
+    print("=" * 72)
+    print("Storage kernels — CPU wall-time + TPU roofline bound")
+    print("=" * 72)
+    rows = bench_kernels.main()
+    _csv("kernels", rows[0]["cpu_s"] * 1e6,
+         f"tpu_bound_us={rows[0]['tpu_roofline_s']*1e6:.1f}")
+
+    print("=" * 72)
+    print("Roofline (from dry-run artifact, single-pod) — see EXPERIMENTS.md")
+    print("=" * 72)
+    try:
+        from benchmarks import bench_roofline
+        table = bench_roofline.main()
+        ok = [r for r in table if r["status"] == "ok"]
+        if ok:
+            avg = sum(r["roofline_frac"] for r in ok) / len(ok)
+            _csv("roofline", 0.0, f"cells={len(ok)},avg_compute_frac={avg:.3f}")
+    except FileNotFoundError:
+        print("experiments/dryrun.json missing — run "
+              "`PYTHONPATH=src python -m repro.launch.dryrun` first")
+
+
+if __name__ == "__main__":
+    main()

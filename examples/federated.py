@@ -1,0 +1,88 @@
+"""Federated-learning controller using MGit lineage (paper §2, graph G3).
+
+Each round: sample clients, train locally on disjoint data shards, average
+into a new global model. Every client model and every global round is a
+lineage node; the whole history is stored delta-compressed.
+
+    PYTHONPATH=src python examples/federated.py [--rounds 3] [--clients 4]
+"""
+
+import argparse
+import dataclasses
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import LineageGraph, ModelArtifact
+from repro.data import SyntheticPipeline
+from repro.models import get_config, init_params
+from repro.optim import adamw
+from repro.store import ArtifactStore
+from repro.store.checkpoint import flatten_state, state_graph, unflatten_state
+from repro.train.step import make_train_step
+
+
+def local_train(cfg, params, seed, steps=8):
+    state = {"params": params, "opt": adamw.init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    step_fn = jax.jit(make_train_step(cfg))
+    pipe = SyntheticPipeline(cfg, batch=4, seq=32, seed=seed)  # client shard
+    for i in range(steps):
+        state, metrics = step_fn(state, pipe.host_batch(i))
+    return state["params"], float(metrics["loss"])
+
+
+def fed_average(params_list):
+    return jax.tree_util.tree_map(
+        lambda *xs: sum(x.astype(jnp.float32) for x in xs) / len(xs), *params_list)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--sample", type=int, default=3, help="clients per round")
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(get_config("paper-bert-small").reduced(),
+                              remat="none")
+    tmp = tempfile.mkdtemp(prefix="mgit-fl-")
+    store = ArtifactStore(root=tmp, codec="lzma")
+    g = LineageGraph(path=tmp, store=store)
+
+    def to_artifact(params):
+        flat = flatten_state(params)
+        return ModelArtifact(state_graph(flat, cfg.name), flat,
+                             model_type=cfg.name)
+
+    global_params = init_params(cfg, 0)
+    g.add_node(to_artifact(global_params), "global_r0")
+
+    for r in range(1, args.rounds + 1):
+        sampled = [(r * 7 + c) % args.clients for c in range(args.sample)]
+        print(f"round {r}: clients {sorted(set(sampled))}")
+        locals_ = []
+        for c in sorted(set(sampled)):
+            params, loss = local_train(cfg, global_params, seed=1000 * r + c)
+            name = f"client{c}_r{r}"
+            # controller registers each client model in the lineage graph
+            g.add_edge(f"global_r{r - 1}", name)
+            g.add_node(to_artifact(params), name)
+            locals_.append(params)
+            print(f"  {name}: loss={loss:.3f}")
+        global_params = fed_average(locals_)
+        gname = f"global_r{r}"
+        for c in sorted(set(sampled)):
+            g.add_edge(f"client{c}_r{r}", gname)
+        g.add_node(to_artifact(global_params), gname)
+
+    s = store.stats()
+    print(f"\n{len(g)} models stored, ratio={s['compression_ratio']:.2f}x "
+          f"({s['logical_bytes']/1e6:.0f}MB → {s['physical_bytes']/1e6:.0f}MB)")
+    print("\nlineage graph:")
+    print(g.log())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Generate the §Perf before/after summary table (baseline vs final)."""
+import json, sys
+
+base = json.load(open("experiments/dryrun_baseline.json"))
+final = json.load(open(sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun_final.json"))
+
+print("| arch | shape | bound_s before | bound_s after | speedup | dominant after | HBM GB before→after | fits |")
+print("|---|---|---|---|---|---|---|---|")
+total_b = total_a = 0.0
+for key in sorted(base):
+    if not key.endswith("single"):
+        continue
+    b = base[key]
+    a = final.get(key, {})
+    if b.get("status") != "ok" or a.get("status") != "ok":
+        continue
+    bb = b["roofline"]["bound_s"]; ab = a["roofline"]["bound_s"]
+    hb = (b["memory_analysis"]["peak_bytes_estimate"] or 0)/2**30
+    ha = (a["memory_analysis"]["peak_bytes_estimate"] or 0)/2**30
+    total_b += bb; total_a += ab
+    print(f"| {b['arch']} | {b['shape']} | {bb:.2f} | {ab:.2f} | "
+          f"**{bb/ab:.2f}x** | {a['roofline']['dominant']} | "
+          f"{hb:.1f}→{ha:.1f} | {'yes' if ha <= 16 else 'NO'} |")
+print(f"\nAggregate bound across cells: {total_b:.0f}s → {total_a:.0f}s "
+      f"(**{total_b/total_a:.2f}x**)")

@@ -1,0 +1,28 @@
+"""Generate the EXPERIMENTS.md roofline tables from dryrun JSON artifacts."""
+import json, sys
+
+def table(path, mesh="single"):
+    data = json.load(open(path))
+    lines = ["| arch | shape | mesh | compute_s | memory_s | collective_s | dominant | rl_frac | useful | HBM GB/dev | fits 16GB |",
+             "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for key in sorted(data):
+        r = data[key]
+        if not key.endswith(mesh):
+            continue
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | SKIP | — | — | — | — |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ERROR | | | | | | | |")
+            continue
+        rt = r["roofline"]
+        hbm = (r["memory_analysis"]["peak_bytes_estimate"] or 0) / 2**30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {rt['compute']:.3f} | {rt['memory']:.3f} | "
+            f"{rt['collective']:.3f} | **{rt['dominant']}** | {rt['compute']/rt['bound_s']:.3f} | "
+            f"{r['useful_flops_ratio']:.2f} | {hbm:.1f} | {'yes' if hbm <= 16 else 'NO'} |")
+    return "\n".join(lines)
+
+if __name__ == "__main__":
+    print(table(sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun.json",
+                sys.argv[2] if len(sys.argv) > 2 else "single"))

@@ -1,0 +1,109 @@
+"""mgit — the command-line interface over the lineage graph (paper §3.1).
+
+    python -m repro.cli -C <repo_dir> <command> [...]
+
+Commands (analogous to git's CLI, per the paper):
+    log                         render the lineage graph
+    show <node>                 node details (parents, versions, storage)
+    diff <a> <b> [--mode]       structural/contextual diff between two models
+    add-edge <x> <y>            provenance edge
+    add-version-edge <x> <y>    versioning edge
+    remove-node <x>             remove node + subtree
+    test <node|--all> [--re]    run registered tests via a traversal
+    stats                       storage statistics (ratio, dedup, objects)
+    gc                          collect unreferenced objects
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.core import LineageGraph, bfs, module_diff
+from repro.store import ArtifactStore
+
+
+def _graph(repo: str) -> LineageGraph:
+    return LineageGraph(path=repo, store=ArtifactStore(root=repo))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="mgit", description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("-C", dest="repo", default=".", help="lineage repo directory")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    sub.add_parser("log")
+    p = sub.add_parser("show")
+    p.add_argument("node")
+    p = sub.add_parser("diff")
+    p.add_argument("a")
+    p.add_argument("b")
+    p.add_argument("--mode", default="contextual",
+                   choices=["structural", "contextual"])
+    p = sub.add_parser("add-edge")
+    p.add_argument("x")
+    p.add_argument("y")
+    p = sub.add_parser("add-version-edge")
+    p.add_argument("x")
+    p.add_argument("y")
+    p = sub.add_parser("remove-node")
+    p.add_argument("x")
+    p = sub.add_parser("test")
+    p.add_argument("node", nargs="?", default=None)
+    p.add_argument("--re", dest="pattern", default=None)
+    sub.add_parser("stats")
+    sub.add_parser("gc")
+
+    args = ap.parse_args(argv)
+    g = _graph(args.repo)
+
+    if args.cmd == "log":
+        print(g.log() or "(empty lineage graph)")
+    elif args.cmd == "show":
+        n = g.nodes[args.node]
+        info = {"name": n.name, "model_type": n.model_type,
+                "parents": n.parents, "children": n.children,
+                "version_parents": n.version_parents,
+                "version_children": n.version_children,
+                "artifact_ref": n.artifact_ref, "metadata": n.metadata}
+        if n.artifact_ref and g.store:
+            m = g.store.get_manifest(n.artifact_ref)
+            kinds = {}
+            for e in m["params"].values():
+                kinds[e["kind"]] = kinds.get(e["kind"], 0) + 1
+            info["storage"] = {"depth": m["depth"], "entries": kinds}
+        print(json.dumps(info, indent=1))
+    elif args.cmd == "diff":
+        d = module_diff(g.get_model(args.a), g.get_model(args.b),
+                        mode=args.mode)
+        print(json.dumps({
+            "mode": d.mode, "divergence": d.divergence,
+            "matched": len(d.matched_nodes),
+            "add_nodes": d.add_nodes, "del_nodes": d.del_nodes,
+            "add_edges": len(d.add_edges), "del_edges": len(d.del_edges),
+        }, indent=1))
+    elif args.cmd == "add-edge":
+        g.add_edge(args.x, args.y)
+        print(f"provenance edge {args.x} -> {args.y}")
+    elif args.cmd == "add-version-edge":
+        g.add_version_edge(args.x, args.y)
+        print(f"version edge {args.x} -> {args.y}")
+    elif args.cmd == "remove-node":
+        g.remove_node(args.x)
+        print(f"removed {args.x} (+subtree)")
+    elif args.cmd == "test":
+        it = bfs(g) if args.node is None else bfs(g, start=args.node)
+        results = g.run_tests(it, re_pattern=args.pattern)
+        print(json.dumps(results, indent=1) if results else
+              "(no registered tests matched — register via the Python API)")
+    elif args.cmd == "stats":
+        print(json.dumps(g.store.stats(), indent=1))
+    elif args.cmd == "gc":
+        print(f"reclaimed {g.store.gc()} bytes")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,3 @@
+from repro.common.hashing import bytes_hash, tensor_hash
+
+__all__ = ["bytes_hash", "tensor_hash"]

@@ -1,0 +1,27 @@
+"""Content hashing for parameter tensors.
+
+Durable keys are SHA-256 over (raw bytes, shape, dtype) — exactly the paper's
+content-based hashing scheme (§4). The TPU-side fast path (polynomial
+fingerprint, see ``repro.kernels.fingerprint``) only *nominates* duplicate
+candidates; this module is the source of truth.
+"""
+
+from __future__ import annotations
+
+import hashlib
+
+import numpy as np
+
+
+def tensor_hash(x) -> str:
+    """SHA-256 content hash of a tensor (value + shape + dtype)."""
+    arr = np.asarray(x)
+    h = hashlib.sha256()
+    h.update(str(arr.shape).encode())
+    h.update(str(arr.dtype).encode())
+    h.update(np.ascontiguousarray(arr).tobytes())
+    return h.hexdigest()
+
+
+def bytes_hash(data: bytes) -> str:
+    return hashlib.sha256(data).hexdigest()

@@ -1,0 +1,26 @@
+"""MGit core: lineage graph, diff, merge, update cascade, auto-construction."""
+
+from repro.core.artifact import ModelArtifact, param_key, split_key
+from repro.core.auto import auto_construct, auto_insert, choose_parent
+from repro.core.cascade import next_version_name, run_update_cascade
+from repro.core.diff import DiffResult, divergence_scores, module_diff
+from repro.core.graphir import LayerGraph, LayerNode
+from repro.core.lineage import (CreationFunction, LineageGraph, LineageNode,
+                                RegisteredTest, register_creation_type)
+from repro.core.merge import (CONFLICT, NO_CONFLICT, POSSIBLE_CONFLICT,
+                              MergeResult, merge, merge_artifacts)
+from repro.core.traversal import (all_parents_first, bfs, bisect, dfs,
+                                  version_chain)
+
+__all__ = [
+    "ModelArtifact", "param_key", "split_key",
+    "auto_construct", "auto_insert", "choose_parent",
+    "next_version_name", "run_update_cascade",
+    "DiffResult", "divergence_scores", "module_diff",
+    "LayerGraph", "LayerNode",
+    "CreationFunction", "LineageGraph", "LineageNode", "RegisteredTest",
+    "register_creation_type",
+    "CONFLICT", "NO_CONFLICT", "POSSIBLE_CONFLICT", "MergeResult", "merge",
+    "merge_artifacts",
+    "all_parents_first", "bfs", "bisect", "dfs", "version_chain",
+]

@@ -1,0 +1,83 @@
+"""ModelArtifact — the unit MGit versions: a LayerGraph plus its parameters.
+
+Parameters are a flat mapping ``"layer/param" -> ndarray``. Artifacts are what
+creation functions return, what ``diff``/``merge`` compare, and what the storage
+layer persists (via the CAS + delta compression).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Mapping, Optional
+
+import numpy as np
+
+from repro.common.hashing import tensor_hash
+from repro.core.graphir import LayerGraph
+
+
+def param_key(layer: str, param: str) -> str:
+    return f"{layer}/{param}"
+
+
+def split_key(key: str):
+    layer, _, param = key.rpartition("/")
+    return layer, param
+
+
+@dataclasses.dataclass
+class ModelArtifact:
+    """A model = structure (LayerGraph) + content (flat param dict) + metadata."""
+
+    graph: LayerGraph
+    params: Dict[str, np.ndarray]
+    model_type: str = "generic"
+    metadata: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    _hashes: Optional[Dict[str, str]] = dataclasses.field(default=None, repr=False)
+
+    def param_hashes(self, recompute: bool = False) -> Dict[str, str]:
+        """Content hash per parameter; cached (params are treated as immutable)."""
+        if self._hashes is None or recompute:
+            self._hashes = {k: tensor_hash(v) for k, v in self.params.items()}
+            # Attach to the LayerGraph so contextual diff sees them.
+            per_layer: Dict[str, Dict[str, str]] = {}
+            for key, h in self._hashes.items():
+                layer, param = split_key(key)
+                per_layer.setdefault(layer, {})[param] = h
+            self.graph.set_param_hashes(per_layer)
+        return self._hashes
+
+    def nbytes(self) -> int:
+        return int(sum(np.asarray(v).nbytes for v in self.params.values()))
+
+    def _clone_graph(self) -> LayerGraph:
+        """Structure-preserving copy. Artifacts must not share LayerGraph objects:
+        contextual hashes are attached to graph nodes, so a shared graph would let
+        one artifact clobber another's content fingerprints."""
+        g = LayerGraph.from_json(self.graph.to_json())
+        for node in g.nodes.values():
+            node.param_hashes = {}
+        return g
+
+    def replace_params(self, new_params: Mapping[str, np.ndarray],
+                       **metadata: Any) -> "ModelArtifact":
+        """Functional update: same structure (cloned), new parameter values."""
+        merged = dict(self.params)
+        merged.update(new_params)
+        meta = dict(self.metadata)
+        meta.update(metadata)
+        return ModelArtifact(graph=self._clone_graph(), params=merged,
+                             model_type=self.model_type, metadata=meta)
+
+    def map_params(self, fn: Callable[[str, np.ndarray], np.ndarray]) -> "ModelArtifact":
+        return ModelArtifact(
+            graph=self._clone_graph(),
+            params={k: fn(k, v) for k, v in self.params.items()},
+            model_type=self.model_type,
+            metadata=dict(self.metadata),
+        )
+
+    def __repr__(self) -> str:
+        mb = self.nbytes() / 1e6
+        return (f"ModelArtifact(type={self.model_type!r}, layers={len(self.graph)}, "
+                f"params={len(self.params)}, {mb:.1f}MB)")

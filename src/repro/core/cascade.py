@@ -1,0 +1,84 @@
+"""Automated model updating — ``run_update_cascade`` (paper Algorithm 2).
+
+When a model ``m`` is updated to ``m'`` (a new version), every descendant of
+``m`` with a registered creation function is rebuilt against the new upstream:
+
+Phase 1 creates (empty) next-version nodes for all descendants, wiring
+provenance edges to the *next versions* of their parents (falling back to the
+current version when a parent is outside the cascade) and version edges to the
+old nodes. Phase 2 walks the new nodes in all-parents-first order and invokes
+each node's creation function (or the merged MTL-group creation function) to
+materialize the new models. MGit never overwrites the old versions.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, List, Optional
+
+from repro.core.lineage import LineageGraph, LineageNode
+from repro.core.traversal import all_parents_first, bfs
+
+SkipFn = Optional[Callable[[LineageNode], bool]]
+TermFn = Optional[Callable[[LineageNode], bool]]
+
+
+def next_version_name(name: str) -> str:
+    base, sep, suffix = name.rpartition("@v")
+    if sep and suffix.isdigit():
+        return f"{base}@v{int(suffix) + 1}"
+    return f"{name}@v2"
+
+
+def run_update_cascade(graph: LineageGraph, m: str, m_prime: str,
+                       skip_fn: SkipFn = None, terminate_fn: TermFn = None,
+                       ) -> List[str]:
+    """Trigger the update cascade for the model update ``m -> m_prime``.
+
+    Returns the names of the newly created model versions (excluding m_prime).
+    """
+    if m_prime not in graph.nodes:
+        raise KeyError(f"updated model {m_prime!r} must already be a node")
+    if m_prime not in graph.nodes[m].version_children:
+        graph.add_version_edge(m, m_prime)
+
+    # ---- Phase 1: create (empty) next versions of all descendants of m. ----
+    skip2 = (lambda x: (skip_fn(x) if skip_fn else False) or x.name == m)
+    new_names: List[str] = []
+    next_of = {m: m_prime}
+    for x in bfs(graph, start=m, skip_fn=skip2, terminate_fn=terminate_fn):
+        if x.creation_fn is None:
+            continue  # nothing to rebuild this node with — leave it untouched
+        x_new_name = next_version_name(x.name)
+        if x_new_name in graph.nodes:
+            continue  # idempotence: cascade already created it
+        parents_new = [next_of.get(p, p) for p in x.parents]
+        node_new = graph.add_node(None, x_new_name, model_type=x.model_type)
+        init = x.creation_fn.initialize([graph.nodes[p] for p in parents_new])
+        if init is not None:
+            node_new.artifact = init
+        for p_new in parents_new:
+            graph.add_edge(p_new, x_new_name)
+        graph.add_version_edge(x.name, x_new_name)
+        node_new.creation_fn = x.creation_fn
+        next_of[x.name] = x_new_name
+        new_names.append(x_new_name)
+
+    # ---- Phase 2: materialize, all parents first (MTL groups together). ----
+    skip3 = (lambda x: (skip_fn(x) if skip_fn else False) or x.name == m_prime)
+    for xs in all_parents_first(graph, start=m_prime, skip_fn=skip3,
+                                terminate_fn=terminate_fn, group_mtl=True):
+        group = xs if isinstance(xs, list) else [xs]
+        group = [x for x in group if x.name in new_names]
+        if not group:
+            continue
+        if len(group) > 1:
+            # merged MTL creation function: one call produces all group members
+            artifacts = group[0].creation_fn.run_group(group)
+            for node, artifact in zip(group, artifacts):
+                graph._attach_artifact(node, artifact)
+        else:
+            node = group[0]
+            artifact = node.creation_fn(node.get_parents())
+            graph._attach_artifact(node, artifact)
+    graph._commit()
+    return new_names

@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticPipeline
+
+__all__ = ["SyntheticPipeline"]

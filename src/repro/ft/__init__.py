@@ -1,0 +1,3 @@
+from repro.ft.straggler import StepTimer, StragglerEvent, StragglerPolicy, Watchdog
+
+__all__ = ["StepTimer", "StragglerEvent", "StragglerPolicy", "Watchdog"]

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for MGit's storage hot path (+ jnp oracles).
+
+- ``delta_quantize`` / ``dequant_apply``: Algorithm 1's lossy delta step, fused.
+- ``fingerprint``: on-device content-hash candidate detection for CAS dedup.
+
+``ops`` dispatches pallas (TPU) / interpret (tests) / ref (CPU oracle).
+"""
+
+from repro.kernels import ops, ref
+from repro.kernels.ops import (default_backend, delta_quantize, dequant_apply,
+                               fingerprint)
+
+__all__ = ["ops", "ref", "default_backend", "delta_quantize", "dequant_apply",
+           "fingerprint"]

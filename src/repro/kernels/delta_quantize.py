@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: fused delta + quantize (Algorithm 1's lossy step).
+
+The storage hot path runs `floor((p1 - p2)/scale + 0.5)` over every parameter
+of every checkpoint. Arithmetic intensity is ~3 FLOPs / 12 bytes ≈ 0.25 —
+firmly HBM-bandwidth bound — so the only thing that matters is touching each
+byte exactly once: one fused pass, no intermediate Δp materialized in HBM.
+
+The kernel additionally emits a per-tile zero count. The host uses these
+counts to *pre-filter* tiles for lossless compression (predicted ratio <= 1 →
+don't ship the tile to the host compressor), which is the paper's "reject if
+no saving" check pushed down to tile granularity on-device.
+
+Layout: inputs are flattened and padded to (rows, LANE_COLS) where LANE_COLS
+is a multiple of 128 (TPU lane width). Grid is 1-D over row-blocks; each
+program reads two (BLOCK_ROWS, LANE_COLS) VMEM tiles and writes one int32
+tile + one zero-count scalar. ``eps`` (hence the scale) is a compile-time
+constant — it is a per-lineage-graph config value, so specializing the kernel
+on it costs one compile per distinct eps and saves a scalar operand.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ref import quant_scale
+
+# 8 sublanes x 128 lanes is the float32 VREG tile; 256x1024 keeps VMEM use
+# ~3 MB for (p1, p2, q) while giving the DMA engine long contiguous reads.
+BLOCK_ROWS = 256
+LANE_COLS = 1024
+
+
+def _delta_quantize_kernel(p1_ref, p2_ref, q_ref, zeros_ref, *, inv_scale: float):
+    d = p1_ref[...].astype(jnp.float32) - p2_ref[...].astype(jnp.float32)
+    q = jnp.floor(d * inv_scale + 0.5).astype(jnp.int32)
+    q_ref[...] = q
+    zeros_ref[0] = jnp.sum(q == 0, dtype=jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def delta_quantize_2d(p1: jnp.ndarray, p2: jnp.ndarray, eps: float = 1e-4,
+                      block_rows: int = BLOCK_ROWS, interpret: bool = False):
+    """p1, p2: (rows, cols) with rows % block_rows == 0, cols % 128 == 0.
+
+    Returns (q int32 (rows, cols), per-block zero counts (rows//block_rows,)).
+    """
+    rows, cols = p1.shape
+    grid = (rows // block_rows,)
+    kernel = functools.partial(_delta_quantize_kernel,
+                               inv_scale=1.0 / quant_scale(eps))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, cols), jnp.int32),
+            jax.ShapeDtypeStruct((grid[0],), jnp.int32),
+        ],
+        interpret=interpret,
+    )(p1, p2)
+
+
+def _dequant_apply_kernel(p1_ref, q_ref, out_ref, *, scale: float):
+    out = p1_ref[...].astype(jnp.float32) - q_ref[...].astype(jnp.float32) * scale
+    out_ref[...] = out.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def dequant_apply_2d(p1: jnp.ndarray, q: jnp.ndarray, eps: float = 1e-4,
+                     block_rows: int = BLOCK_ROWS, interpret: bool = False):
+    """Reconstruct child tile-wise: p2' = p1 - q * scale."""
+    rows, cols = p1.shape
+    grid = (rows // block_rows,)
+    kernel = functools.partial(_dequant_apply_kernel, scale=quant_scale(eps))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), p1.dtype),
+        interpret=interpret,
+    )(p1, q)
+
+
+__all__ = ["delta_quantize_2d", "dequant_apply_2d", "BLOCK_ROWS", "LANE_COLS",
+           "quant_scale"]

@@ -1,0 +1,327 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: AOT-lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds ShapeDtypeStruct inputs (launch/shapes.py — no allocation),
+  2. ``jax.jit(step).lower(...).compile()`` under the production mesh,
+  3. records ``memory_analysis()`` (fits-in-HBM proof), ``cost_analysis()``
+     (FLOPs / bytes), and the collective schedule parsed from the optimized
+     HLO (operand bytes of all-gather/all-reduce/reduce-scatter/all-to-all/
+     collective-permute), and
+  4. derives the three roofline terms (EXPERIMENTS.md §Roofline).
+
+Results are cached per-cell into a JSON file so reruns are incremental.
+
+NOTE: the XLA_FLAGS line above MUST stay the first statement — jax locks the
+device count at first init. Only the dry-run sets it; tests/benches see 1 CPU.
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.dist.sharding import use_mesh
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import SHAPES, cell_supported, input_specs
+from repro.models.config import get_config, list_archs
+
+# -- TPU v5e hardware model (assignment constants) ---------------------------
+PEAK_FLOPS = 197e12       # bf16 FLOP/s per chip
+HBM_BW = 819e9            # bytes/s per chip
+LINK_BW = 50e9            # bytes/s per ICI link
+
+ARCHS = [
+    "starcoder2-15b", "yi-6b", "qwen3-0.6b", "deepseek-coder-33b",
+    "seamless-m4t-large-v2", "mamba2-780m", "llama4-scout-17b-16e",
+    "mixtral-8x7b", "jamba-1.5-large-398b", "paligemma-3b",
+]
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8}
+_SHAPE_RE = re.compile(r"\b(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|\S+)\s+(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Any]:
+    """Per-device operand/result bytes of every collective in the HLO."""
+    per_op: Dict[str, Dict[str, int]] = {}
+    total_operand = total_result = 0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None:
+            continue
+        kind = m.group(1)
+        # result type(s): everything left of the '=' is the result name; the
+        # type annotation follows '='. operands: types inside the parens.
+        lhs, _, rhs = line.partition("=")
+        paren = rhs.find("(")
+        result_types = _SHAPE_RE.findall(rhs[:paren])
+        # operand section ends at the matching close paren — approximate with
+        # the full remainder (attribute strings contain no dtype[shape] tokens)
+        operand_types = _SHAPE_RE.findall(rhs[paren:rhs.find(")", paren)])
+        ob = sum(_shape_bytes(d, s) for d, s in operand_types)
+        rb = sum(_shape_bytes(d, s) for d, s in result_types)
+        agg = per_op.setdefault(kind, {"count": 0, "operand_bytes": 0,
+                                       "result_bytes": 0})
+        agg["count"] += 1
+        agg["operand_bytes"] += ob
+        agg["result_bytes"] += rb
+        total_operand += ob
+        total_result += rb
+    return {"per_op": per_op, "operand_bytes": total_operand,
+            "result_bytes": total_result}
+
+
+_FLOPS_SEMANTICS: Optional[str] = None
+
+
+def calibrate_flops_semantics(mesh) -> str:
+    """Determine whether cost_analysis() reports per-device or global FLOPs
+    by lowering a known sharded matmul."""
+    global _FLOPS_SEMANTICS
+    if _FLOPS_SEMANTICS is not None:
+        return _FLOPS_SEMANTICS
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    m = k = n = 1024
+    a = jax.ShapeDtypeStruct((m, k), np.float32,
+                             sharding=NamedSharding(mesh, P("data", None)))
+    b = jax.ShapeDtypeStruct((k, n), np.float32,
+                             sharding=NamedSharding(mesh, P(None, "model")))
+    with mesh:
+        compiled = jax.jit(lambda x, y: x @ y).lower(a, b).compile()
+    flops = compiled.cost_analysis().get("flops", 0.0)
+    expected_global = 2.0 * m * k * n
+    _FLOPS_SEMANTICS = ("per_device" if flops < expected_global / 2
+                        else "global")
+    return _FLOPS_SEMANTICS
+
+
+def count_params(cfg) -> int:
+    from repro.models import param_shapes
+    return int(sum(int(np.prod(s)) for s in param_shapes(cfg).values()))
+
+
+def count_active_params(cfg) -> int:
+    """Per-token active parameters (MoE: top-k + shared experts only)."""
+    from repro.models import param_shapes
+    total = 0
+    for path, shape in param_shapes(cfg).items():
+        n = int(np.prod(shape))
+        if "/moe/w_" in path and "shared" not in path:
+            n = n * cfg.experts_per_token // max(cfg.n_experts, 1)
+        total += n
+    return total
+
+
+def model_flops(cfg, cell) -> float:
+    """Analytic MODEL_FLOPS for the cell (6·N·D train, 2·N·D fwd-only)."""
+    n_active = count_active_params(cfg)
+    if cell.kind == "train":
+        tokens = cell.batch * cell.seq
+        return 6.0 * n_active * tokens
+    if cell.kind == "prefill":
+        tokens = cell.batch * cell.seq
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * cell.batch  # decode: one token per sequence
+
+
+def build_step(cfg, cell):
+    """(fn, kwargs-order, donate) for the cell kind."""
+    if cell.kind == "train":
+        from repro.train.step import make_train_step
+        fn = make_train_step(cfg, n_microbatches=cell.microbatches)
+        return fn, ("state", "batch"), (0,)
+    if cell.kind == "prefill":
+        from repro.serve.engine import make_prefill_step
+        fn = make_prefill_step(cfg, max_len=cell.seq)
+        return fn, ("params", "batch"), ()
+    from repro.models.model import decode_step
+    import functools
+    fn = functools.partial(decode_step, cfg)
+    return fn, ("params", "token", "cache", "pos"), (2,)
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             microbatches: Optional[int] = None,
+             remat: Optional[str] = None) -> Dict[str, Any]:
+    import dataclasses as dc
+    cfg = get_config(arch)
+    if remat is not None:
+        cfg = dc.replace(cfg, remat=remat)
+    cell = SHAPES[shape]
+    if microbatches is not None:
+        cell = dc.replace(cell, microbatches=microbatches)
+    ok, why = cell_supported(cfg, cell)
+    result: Dict[str, Any] = {
+        "arch": arch, "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": cell.kind,
+    }
+    if not ok:
+        result["status"] = "skipped"
+        result["reason"] = why
+        return result
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    semantics = calibrate_flops_semantics(mesh)
+    specs = input_specs(arch, shape, mesh, cfg=cfg)
+    fn, order, donate = build_step(cfg, cell)
+    args = [specs[k] for k in order]
+
+    t0 = time.time()
+    with mesh, use_mesh(mesh):
+        lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo_text = compiled.as_text()
+
+    # loop-aware per-device accounting (hlo_cost.py) — XLA's cost_analysis
+    # counts while bodies once, so it badly undercounts scanned programs;
+    # we keep its raw numbers as side data.
+    from repro.launch import hlo_cost
+    acc = hlo_cost.analyze(hlo_text)
+    coll = acc["collectives"]
+
+    flops = float(acc["flops"])
+    bytes_accessed = float(acc["bytes"])
+    flops_global = flops * chips
+    bytes_global = bytes_accessed * chips
+    coll_global_operand = coll["operand_bytes"] * chips
+    coll_global_result = coll["result_bytes"] * chips
+
+    # roofline terms (seconds) — spec formulas over GLOBAL quantities
+    t_compute = flops_global / (chips * PEAK_FLOPS)
+    t_memory = bytes_global / (chips * HBM_BW)
+    t_collective = coll_global_operand / (chips * LINK_BW)
+    t_coll_wire = coll["wire_bytes"] / LINK_BW  # per-device wire model
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_collective}
+    dominant = max(terms, key=terms.get)
+
+    mf = model_flops(cfg, cell)
+    result.update(
+        status="ok",
+        chips=chips,
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        flops_per_device=flops,
+        bytes_per_device=bytes_accessed,
+        collective={**coll, "global_operand_bytes": coll_global_operand,
+                    "global_result_bytes": coll_global_result},
+        memory_analysis={
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+            "peak_bytes_estimate": (
+                (getattr(mem, "argument_size_in_bytes", 0) or 0)
+                + (getattr(mem, "output_size_in_bytes", 0) or 0)
+                + (getattr(mem, "temp_size_in_bytes", 0) or 0)
+                - (getattr(mem, "alias_size_in_bytes", 0) or 0)),
+        },
+        roofline={
+            **{k: float(v) for k, v in terms.items()},
+            "collective_wire": float(t_coll_wire),
+            "dominant": dominant,
+            "bound_s": float(max(terms.values())),
+        },
+        model_flops=mf,
+        hlo_flops_global=flops_global,
+        useful_flops_ratio=(mf / flops_global if flops_global else None),
+        params=count_params(cfg),
+        active_params=count_active_params(cfg),
+        flops_semantics=semantics,
+        xla_cost_analysis={"flops": float(cost.get("flops", 0.0)),
+                           "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+                           "note": "loop bodies counted once by XLA"},
+        unknown_ops=acc.get("unknown_ops", {}),
+    )
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun.json")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--remat", default=None)
+    args = ap.parse_args()
+
+    archs = ARCHS if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    pods = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results: Dict[str, Any] = {}
+    if os.path.exists(args.out) and not args.force:
+        with open(args.out) as f:
+            results = json.load(f)
+
+    for arch in archs:
+        for shape in shapes:
+            for multi in pods:
+                key = f"{arch}|{shape}|{'multi' if multi else 'single'}"
+                if key in results and results[key].get("status") in ("ok", "skipped") \
+                        and args.microbatches is None and args.remat is None:
+                    print(f"[cached] {key}", flush=True)
+                    continue
+                print(f"[run]    {key}", flush=True)
+                try:
+                    r = run_cell(arch, shape, multi,
+                                 microbatches=args.microbatches,
+                                 remat=args.remat)
+                except Exception as e:  # record the failure, keep sweeping
+                    r = {"arch": arch, "shape": shape,
+                         "mesh": "2x16x16" if multi else "16x16",
+                         "status": "error", "error": f"{type(e).__name__}: {e}",
+                         "traceback": traceback.format_exc()[-2000:]}
+                results[key] = r
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1, default=str)
+                status = r.get("status")
+                extra = ""
+                if status == "ok":
+                    rt = r["roofline"]
+                    extra = (f" dominant={rt['dominant']}"
+                             f" bound={rt['bound_s']*1e3:.1f}ms"
+                             f" compile={r['compile_s']:.0f}s")
+                elif status == "error":
+                    extra = " " + r["error"][:120]
+                print(f"  -> {status}{extra}", flush=True)
+
+    n_ok = sum(1 for r in results.values() if r.get("status") == "ok")
+    n_skip = sum(1 for r in results.values() if r.get("status") == "skipped")
+    n_err = sum(1 for r in results.values() if r.get("status") == "error")
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_err} errors -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,302 @@
+"""Loop-aware cost model over optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE, which makes
+it useless for scan-based programs (layers, microbatches and attention chunks
+all live in loops here). The optimized HLO, however, carries
+``backend_config={"known_trip_count":{"n":...}}`` on every counted loop, so
+this module re-derives the totals exactly:
+
+  flops        2·prod(result)·prod(contracting dims) per dot (+1 flop/element
+               for elementwise/reduce ops — softmax/norm traffic), multiplied
+               through the loop nest;
+  bytes        post-fusion memory traffic: every top-level instruction reads
+               its operands and writes its result once (fusions are opaque —
+               exactly XLA's own bytes-accessed semantics), times trip counts;
+  collectives  operand/result bytes per all-gather / all-reduce /
+               reduce-scatter / all-to-all / collective-permute, times trips.
+
+All quantities are PER-DEVICE (the compiled module is the post-SPMD
+per-core program). Validated against cost_analysis on loop-free programs in
+tests/test_hlo_cost.py.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2,
+                "u16": 2, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4,
+                "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+                "f8e4m3fn": 1, "f8e5m2": 1, "token": 0, "opaque": 0}
+
+# ops that move no data / do no math
+_FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+             "after-all", "partition-id", "replica-id", "iota",
+             "optimization-barrier", "custom-call"}
+_ELEMENTWISE = {"add", "subtract", "multiply", "divide", "maximum", "minimum",
+                "exponential", "tanh", "rsqrt", "sqrt", "log", "log-plus-one",
+                "exponential-minus-one", "negate", "abs", "floor", "ceil",
+                "power", "compare", "select", "and", "or", "xor", "not",
+                "sign", "cosine", "sine", "atan2", "remainder",
+                "round-nearest-afz", "round-nearest-even", "clamp",
+                "shift-left", "shift-right-logical", "shift-right-arithmetic",
+                "logistic", "is-finite", "expm1", "log1p", "cbrt", "erf",
+                "reduce-precision", "stochastic-convert"}
+_COLLECTIVES = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute"}
+
+_TYPE_TOKEN = r"(?:\((?:[^()]|\([^()]*\))*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)"
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(" + _TYPE_TOKEN + r")\s+([\w\-]+)\(")
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _type_bytes(type_str: str) -> int:
+    return sum(_shape_elems(dims) * _DTYPE_BYTES.get(dt, 4)
+               for dt, dims in _SHAPE_RE.findall(type_str))
+
+
+def _type_elems(type_str: str) -> int:
+    return sum(_shape_elems(dims) for _, dims in _SHAPE_RE.findall(type_str))
+
+
+class Instr:
+    __slots__ = ("name", "type_str", "op", "line")
+
+    def __init__(self, name: str, type_str: str, op: str, line: str):
+        self.name = name
+        self.type_str = type_str
+        self.op = op
+        self.line = line
+
+
+def parse_module(text: str) -> Dict[str, List[Instr]]:
+    """computation name -> instruction list."""
+    comps: Dict[str, List[Instr]] = {}
+    current: Optional[str] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if current is None:
+            # header: `%name (args…) -> type {` — args may contain nested parens
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$", line)
+            if m and not stripped.startswith("//"):
+                current = m.group(1)
+                comps[current] = []
+            continue
+        if stripped == "}" or stripped.startswith("} "):
+            current = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            comps[current].append(Instr(m.group(1), m.group(2), m.group(3),
+                                        stripped))
+    return comps
+
+
+class HloCost:
+    def __init__(self, text: str):
+        self.comps = parse_module(text)
+        self.entry = self._find_entry(text)
+        self._types: Dict[str, str] = {}
+        for instrs in self.comps.values():
+            for i in instrs:
+                self._types[i.name] = i.type_str
+        self._memo: Dict[str, Tuple[float, float, Dict]] = {}
+        self.unknown_ops: Dict[str, int] = {}
+
+    def _find_entry(self, text: str) -> str:
+        m = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.MULTILINE)
+        if m:
+            return m.group(1)
+        return next(iter(self.comps))
+
+    # -- per-instruction local costs ---------------------------------------
+    def _operands(self, instr: Instr) -> List[str]:
+        paren = instr.line.find("(")
+        depth = 0
+        end = paren
+        for idx in range(paren, len(instr.line)):
+            ch = instr.line[idx]
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = idx
+                    break
+        return _OPERAND_RE.findall(instr.line[paren:end + 1])
+
+    def _operand_bytes(self, instr: Instr) -> int:
+        return sum(_type_bytes(self._types.get(o, "")) for o in self._operands(instr))
+
+    def _dot_flops(self, instr: Instr) -> float:
+        result_elems = _type_elems(instr.type_str)
+        ops = self._operands(instr)
+        lhs_type = self._types.get(ops[0], "") if ops else ""
+        m = _CDIMS_RE.search(instr.line)
+        contract = 1
+        if m and lhs_type:
+            shapes = _SHAPE_RE.findall(lhs_type)
+            if shapes:
+                dims = [int(d) for d in shapes[0][1].split(",") if d]
+                for ci in m.group(1).split(","):
+                    if ci:
+                        contract *= dims[int(ci)]
+        return 2.0 * result_elems * contract
+
+    # -- recursive totals ------------------------------------------------------
+    def total(self, comp: Optional[str] = None) -> Tuple[float, float, Dict]:
+        """(flops, bytes, collectives) of one execution of ``comp``."""
+        comp = comp or self.entry
+        if comp in self._memo:
+            return self._memo[comp]
+        self._memo[comp] = (0.0, 0.0, {})  # cycle guard
+        flops = 0.0
+        mem = 0.0
+        coll: Dict[str, Dict[str, float]] = {}
+
+        def add_coll(kind, ob, rb, n=1.0):
+            agg = coll.setdefault(kind, {"count": 0.0, "operand_bytes": 0.0,
+                                         "result_bytes": 0.0})
+            agg["count"] += n
+            agg["operand_bytes"] += ob
+            agg["result_bytes"] += rb
+
+        def merge_coll(sub: Dict, mult: float = 1.0):
+            for kind, agg in sub.items():
+                add_coll(kind, agg["operand_bytes"] * mult,
+                         agg["result_bytes"] * mult, agg["count"] * mult)
+
+        for instr in self.comps.get(comp, []):
+            op = instr.op
+            if op == "while":
+                trips = 1
+                m = _TRIP_RE.search(instr.line)
+                if m:
+                    trips = int(m.group(1))
+                body = _BODY_RE.search(instr.line)
+                cond = _COND_RE.search(instr.line)
+                for sub in (body, cond):
+                    if sub:
+                        f, b, c = self.total(sub.group(1))
+                        flops += trips * f
+                        mem += trips * b
+                        merge_coll(c, trips)
+                continue
+            if op == "fusion":
+                m = _CALLS_RE.search(instr.line)
+                if m:
+                    f, _, c = self.total(m.group(1))
+                    flops += f            # flops inside the fusion body
+                    merge_coll(c)
+                mem += _type_bytes(instr.type_str) + self._operand_bytes(instr)
+                continue
+            if op in ("call", "async-start"):
+                m = _TO_APPLY_RE.search(instr.line)
+                if m:
+                    f, b, c = self.total(m.group(1))
+                    flops += f
+                    mem += b
+                    merge_coll(c)
+                continue
+            if op == "conditional":
+                m = _BRANCHES_RE.search(instr.line)
+                if m:
+                    subs = _OPERAND_RE.findall(m.group(1))
+                    totals = [self.total(s) for s in subs]
+                    if totals:
+                        f = max(t[0] for t in totals)
+                        b = max(t[1] for t in totals)
+                        flops += f
+                        mem += b
+                        merge_coll(totals[0][2])
+                continue
+            if op in _COLLECTIVES or (op.endswith("-start") and
+                                      op[:-6] in _COLLECTIVES):
+                kind = op[:-6] if op.endswith("-start") else op
+                ob = self._operand_bytes(instr)
+                rb = _type_bytes(instr.type_str)
+                add_coll(kind, ob, rb)
+                mem += ob + rb
+                continue
+            if op in _FREE_OPS or op.endswith("-done"):
+                continue
+            if op == "dot" or op == "convolution":
+                flops += self._dot_flops(instr)
+                mem += _type_bytes(instr.type_str) + self._operand_bytes(instr)
+                continue
+            if op in _ELEMENTWISE or op == "convert":
+                flops += _type_elems(instr.type_str)
+                mem += _type_bytes(instr.type_str) + self._operand_bytes(instr)
+                continue
+            if op in ("reduce", "reduce-window"):
+                flops += sum(_type_elems(self._types.get(o, ""))
+                             for o in self._operands(instr)) / 2
+                mem += _type_bytes(instr.type_str) + self._operand_bytes(instr)
+                continue
+            # data movement ops (copy, transpose, broadcast, slice, pad,
+            # dynamic-slice, dynamic-update-slice, gather, scatter, reshape,
+            # concatenate, sort, rng, ...) — bytes only
+            mem += _type_bytes(instr.type_str) + self._operand_bytes(instr)
+            if op not in ("copy", "transpose", "broadcast", "slice", "pad",
+                          "reshape", "concatenate", "dynamic-slice",
+                          "dynamic-update-slice", "gather", "scatter", "sort",
+                          "rng", "rng-bit-generator", "map", "select-and-scatter",
+                          "copy-start"):
+                self.unknown_ops[op] = self.unknown_ops.get(op, 0) + 1
+
+        self._memo[comp] = (flops, mem, coll)
+        return self._memo[comp]
+
+
+def analyze(text: str) -> Dict:
+    """Loop-aware per-device totals for the entry computation."""
+    hc = HloCost(text)
+    flops, mem, coll = hc.total()
+    total_ob = sum(c["operand_bytes"] for c in coll.values())
+    total_rb = sum(c["result_bytes"] for c in coll.values())
+    # wire-bytes model per collective kind (ring algorithms):
+    #   all-gather: each device receives the full result;
+    #   reduce-scatter: sends the full operand;
+    #   all-reduce: RS + AG = 2x the buffer;
+    #   all-to-all / permute: buffer-sized exchange.
+    wire = 0.0
+    for kind, c in coll.items():
+        hi = max(c["operand_bytes"], c["result_bytes"])
+        if kind == "all-reduce":
+            wire += 2 * hi
+        elif kind == "all-gather":
+            wire += c["result_bytes"]
+        elif kind == "reduce-scatter":
+            wire += max(c["operand_bytes"], c["result_bytes"])
+        else:
+            wire += hi
+    return {
+        "flops": flops,
+        "bytes": mem,
+        "collectives": {
+            "per_op": coll,
+            "operand_bytes": total_ob,
+            "result_bytes": total_rb,
+            "wire_bytes": wire,
+        },
+        "unknown_ops": hc.unknown_ops,
+    }

@@ -1,0 +1,21 @@
+"""Production mesh definitions (multi-pod dry-run spec).
+
+A FUNCTION, not a module-level constant — importing this module never touches
+jax device state (device count locks on first jax init).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod; 2 pods = 512 chips when multi_pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1x1 mesh for CPU smoke runs through the same code path."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,209 @@
+"""The assigned input-shape cells + ShapeDtypeStruct input specs per cell.
+
+Shapes (per assignment):
+  train_4k     seq 4096,    global_batch 256   -> lowers train_step
+  prefill_32k  seq 32768,   global_batch 32    -> lowers prefill_step
+  decode_32k   seq 32768,   global_batch 128   -> lowers serve_step (1 token,
+                                                  KV cache of seq_len)
+  long_500k    seq 524288,  global_batch 1     -> serve_step; sub-quadratic
+                                                  archs only (cfg.subquadratic)
+
+``input_specs`` returns weak-type-correct, shardable ShapeDtypeStruct
+stand-ins for every input — no device allocation, so full-size configs lower
+on a CPU host with 512 placeholder devices.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.dist.sharding import _resolve_entry, param_spec
+from repro.models import cache_shapes, param_shapes
+from repro.models.config import ModelConfig
+from repro.models.model import param_structs
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str          # train | prefill | decode
+    seq: int
+    batch: int
+    # microbatches for train cells (activation-memory knob; §Perf)
+    microbatches: int = 1
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256, microbatches=16),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1),
+}
+
+DEC_LEN_CAP = 4096   # enc-dec: decoder stream capped (DESIGN.md §5)
+CROSS_LEN = 4096     # enc-dec decode: encoder memory length
+
+
+def cell_supported(cfg: ModelConfig, cell: ShapeCell) -> Tuple[bool, str]:
+    if cell.name == "long_500k" and not cfg.subquadratic:
+        return False, "full quadratic attention — long-context decode skipped (DESIGN.md §5)"
+    return True, ""
+
+
+def _ns(mesh: Optional[Mesh], *entries):
+    if mesh is None:
+        return None
+    axes = set(mesh.axis_names)
+    return NamedSharding(mesh, P(*[_resolve_entry(e, axes) for e in entries]))
+
+
+def _sds(shape, dtype, sharding):
+    if sharding is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def batch_structs(cfg: ModelConfig, cell: ShapeCell,
+                  mesh: Optional[Mesh]) -> Dict[str, Any]:
+    """Model-input ShapeDtypeStructs for a train/prefill cell."""
+    B, S = cell.batch, cell.seq
+    bsh2 = _ns(mesh, ("pod", "data"), None)
+    bsh3 = _ns(mesh, ("pod", "data"), None, None)
+    out: Dict[str, Any] = {}
+    if cfg.family in ("encdec", "audio"):
+        out["frames"] = _sds((B, S, cfg.d_model), jnp.float32, bsh3)
+        out["tokens"] = _sds((B, min(S, DEC_LEN_CAP)), jnp.int32, bsh2)
+    elif cfg.family == "vlm":
+        out["patches"] = _sds((B, cfg.n_prefix_tokens, cfg.d_model),
+                              jnp.float32, bsh3)
+        out["tokens"] = _sds((B, S - cfg.n_prefix_tokens), jnp.int32, bsh2)
+    else:
+        out["tokens"] = _sds((B, S), jnp.int32, bsh2)
+    return out
+
+
+def _cache_part_spec(path: str, shape: Tuple[int, ...]) -> Tuple:
+    """Sharding for decode caches: batch over ('pod','data'); for batch=1
+    long-context cells the sequence axis takes 'data' instead; head_dim or
+    heads over 'model' where divisible."""
+    leaf = path.rsplit("/", 1)[-1]
+    if leaf in ("k", "v"):
+        # (L, B, S, H, hd): batch over data axes, SEQUENCE over model
+        # (flash-decode style split-KV). Sharding head_dim instead forces a
+        # full per-layer cache all-gather (measured 131GB/step on
+        # deepseek decode; §Perf-C) — with S@model only the tiny softmax
+        # stats cross the mesh.
+        if shape[1] == 1:  # batch 1 (long_500k): sequence takes every axis
+            return (None, None, ("pod", "data", "model"), None, None)
+        return (None, ("pod", "data"), "model", None, None)
+    if "state" in path:   # (L, B, H, N, P) or (L, n, B, H, N, P)
+        spec = [None] * len(shape)
+        bi = 1 if len(shape) == 5 else 2
+        if shape[bi] > 1:
+            spec[bi] = ("pod", "data")
+        spec[bi + 1] = "model"
+        return tuple(spec)
+    if "conv" in path:    # (L, B, K-1, Cd) or (L, n, B, K-1, Cd)
+        spec = [None] * len(shape)
+        bi = 1 if len(shape) == 4 else 2
+        if shape[bi] > 1:
+            spec[bi] = ("pod", "data")
+        spec[-1] = "model"
+        return tuple(spec)
+    return tuple([None] * len(shape))
+
+
+def cache_structs_sharded(cfg: ModelConfig, cell: ShapeCell,
+                          mesh: Optional[Mesh]):
+    from repro.models.model import _nested
+    enc_len = CROSS_LEN if cfg.family in ("encdec", "audio") else 0
+    flat = {}
+    for path, (shape, dtype) in cache_shapes(cfg, cell.batch, cell.seq,
+                                             enc_len).items():
+        sh = _ns(mesh, *_cache_part_spec(path, shape)) if mesh else None
+        flat[path] = _sds(shape, dtype, sh)
+    return _nested(flat)
+
+
+def params_structs_sharded(cfg: ModelConfig, mesh: Optional[Mesh]):
+    structs = param_structs(cfg)
+    if mesh is None:
+        return structs
+    from repro.models.model import flat_paths, _nested
+    axes = set(mesh.axis_names)
+
+    def _axis_size(e) -> int:
+        names = (e,) if isinstance(e, str) else e
+        return int(np.prod([mesh.shape[a] for a in names]))
+
+    flat = {}
+    for path, s in flat_paths(structs).items():
+        spec = param_spec(path, len(s.shape))
+        entries = [_resolve_entry(e, axes) for e in spec]
+        dropped = []
+        for i, e in enumerate(entries):
+            if e is not None and s.shape[i] % _axis_size(e) != 0:
+                dropped.append(e)   # non-divisible (e.g. E=8 experts on 16-way)
+                entries[i] = None
+        # re-place dropped mesh axes on the largest divisible unsharded dim so
+        # big tensors never silently replicate (mixtral expert weights!)
+        for e in dropped:
+            for i in sorted(range(len(entries)), key=lambda i: -s.shape[i]):
+                if entries[i] is None and s.shape[i] % _axis_size(e) == 0:
+                    entries[i] = e
+                    break
+        flat[path] = _sds(s.shape, s.dtype, NamedSharding(mesh, P(*entries)))
+    return _nested(flat)
+
+
+def state_structs_sharded(cfg: ModelConfig, mesh: Optional[Mesh],
+                          compress_grads: bool = False):
+    """TrainState ShapeDtypeStructs (params + fp32 moments, ZeRO-sharded)."""
+    from repro.optim.adamw import OptState
+    params = params_structs_sharded(cfg, mesh)
+    f32 = lambda s: _sds(s.shape, jnp.float32, getattr(s, "sharding", None))
+    mu = jax.tree_util.tree_map(f32, params)
+    nu = jax.tree_util.tree_map(f32, params)
+    state = {
+        "params": params,
+        "opt": OptState(mu=mu, nu=nu, count=_sds((), jnp.int32, _ns(mesh))),
+        "step": _sds((), jnp.int32, _ns(mesh)),
+    }
+    if compress_grads:
+        state["err"] = jax.tree_util.tree_map(f32, params)
+    return state
+
+
+def decode_token_structs(cfg: ModelConfig, cell: ShapeCell,
+                         mesh: Optional[Mesh]):
+    tok = _sds((cell.batch, 1), jnp.int32,
+               _ns(mesh, ("pod", "data"), None) if cell.batch > 1 else _ns(mesh))
+    pos = _sds((), jnp.int32, _ns(mesh))
+    return tok, pos
+
+
+def input_specs(arch: str, shape: str, mesh: Optional[Mesh] = None,
+                cfg: Optional[ModelConfig] = None) -> Dict[str, Any]:
+    """All ShapeDtypeStruct inputs for one (arch x shape) dry-run cell."""
+    from repro.models.config import get_config
+    cfg = cfg or get_config(arch)
+    cell = SHAPES[shape]
+    ok, why = cell_supported(cfg, cell)
+    if not ok:
+        raise ValueError(f"{arch} x {shape} unsupported: {why}")
+    if cell.kind == "train":
+        return {"state": state_structs_sharded(cfg, mesh),
+                "batch": batch_structs(cfg, cell, mesh)}
+    if cell.kind == "prefill":
+        return {"params": params_structs_sharded(cfg, mesh),
+                "batch": batch_structs(cfg, cell, mesh)}
+    token, pos = decode_token_structs(cfg, cell, mesh)
+    return {"params": params_structs_sharded(cfg, mesh),
+            "cache": cache_structs_sharded(cfg, cell, mesh),
+            "token": token, "pos": pos}

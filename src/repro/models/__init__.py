@@ -1,0 +1,12 @@
+"""Composable model definitions for all assigned architecture families."""
+
+from repro.models.config import ModelConfig, get_config, list_archs, register_arch
+from repro.models.model import (cache_shapes, cache_structs, decode_step,
+                                flat_paths, forward, init_cache, init_params,
+                                param_shapes, param_structs, prefill)
+
+__all__ = [
+    "ModelConfig", "get_config", "list_archs", "register_arch",
+    "cache_shapes", "cache_structs", "decode_step", "flat_paths", "forward",
+    "init_cache", "init_params", "param_shapes", "param_structs", "prefill",
+]

@@ -1,0 +1,333 @@
+"""Shared layer numerics: norms, RoPE, chunked attention, MLP, MoE.
+
+Everything is pure JAX (einsum + lax control flow) with explicit sharding
+constraints; per DESIGN.md §4 the paper contributes no model-compute kernel,
+so Pallas stays in the storage path.
+
+Attention is double-chunked (outer scan over query blocks, inner scan over KV
+blocks, online softmax) so compiled activation memory is O(S·chunk) rather
+than O(S²) — required for the 32k-prefill dry-run cells to fit HBM.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from repro.models.config import ModelConfig
+
+NEG_INF = -1e30
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: (S,) or (B, S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def _mask_bias(q_pos: jnp.ndarray, kv_pos: jnp.ndarray, window: int,
+               prefix_len: int, causal: bool) -> jnp.ndarray:
+    """(Sq, C) additive bias: 0 where attendable, NEG_INF elsewhere."""
+    q = q_pos[:, None]
+    k = kv_pos[None, :]
+    if causal:
+        ok = k <= q
+        if prefix_len > 0:  # prefix-LM: bidirectional over the prefix
+            ok = ok | (k < prefix_len)
+    else:
+        ok = jnp.ones((q_pos.shape[0], kv_pos.shape[0]), dtype=bool)
+    if window > 0:
+        ok = ok & (q - k < window)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      cfg: ModelConfig, *, causal: bool = True,
+                      q_offset: int = 0, kv_offset: int = 0,
+                      prefix_len: int = 0,
+                      kv_len: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Memory-efficient attention.
+
+    q: (B, Sq, Hq, hd); k, v: (B, Skv, Hkv, hd). Returns (B, Sq, Hq, hd).
+    ``kv_len`` (scalar array) masks out cache positions >= kv_len (decode).
+    """
+    B, Sq, Hq, hd = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = hd ** -0.5
+    def _fit(n: int, c: int) -> int:
+        c = min(c, n)
+        while n % c:  # largest divisor <= requested chunk (exact tiling)
+            c -= 1
+        return c
+
+    qc = _fit(Sq, cfg.attn_chunk)
+    kc = _fit(Skv, cfg.attn_chunk)
+    n_q, n_k = Sq // qc, Skv // kc
+
+    # bf16 score pipeline (§Perf iteration 2): the materialized (qc x kc)
+    # score/prob tiles dominate attention HBM traffic under XLA; computing
+    # them in bf16 (f32 softmax statistics and f32 output accumulator keep
+    # the numerics anchored) halves that traffic. Enabled only when the
+    # model itself runs bf16.
+    cdt = jnp.bfloat16 if jnp.dtype(cfg.dtype) == jnp.bfloat16 else jnp.float32
+
+    q = q.reshape(B, n_q, qc, Hkv, G, hd).astype(cdt) * jnp.asarray(scale, cdt)
+    k = k.reshape(B, n_k, kc, Hkv, hd)
+    v = v.reshape(B, n_k, kc, Hkv, hd)
+
+    def q_block(qi):
+        q_blk = q[:, qi]                      # (B, qc, Hkv, G, hd)
+        q_pos = q_offset + qi * qc + jnp.arange(qc)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            k_blk = k[:, ki].astype(cdt)
+            v_blk = v[:, ki].astype(cdt)
+            kv_pos = kv_offset + ki * kc + jnp.arange(kc)
+            s = jnp.einsum("bqhgd,bchd->bqhgc", q_blk, k_blk)  # cdt tile
+            bias = _mask_bias(q_pos, kv_pos, cfg.window, prefix_len, causal)
+            if kv_len is not None:
+                bias = bias + jnp.where(kv_pos[None, :] < kv_len, 0.0, NEG_INF)
+            s = s + bias[None, :, None, None, :].astype(cdt)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1).astype(jnp.float32))
+            p = jnp.exp(s.astype(jnp.float32) - m_new[..., None]).astype(cdt)
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + jnp.sum(p, axis=-1, dtype=jnp.float32)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bqhgc,bchd->bqhgd", p, v_blk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l, acc), None
+
+        init = (
+            jnp.full((B, qc, Hkv, G), NEG_INF, jnp.float32),
+            jnp.zeros((B, qc, Hkv, G), jnp.float32),
+            jnp.zeros((B, qc, Hkv, G, hd), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(n_k))
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    if n_q == 1:
+        out = q_block(0)[:, None]
+    else:
+        out = jax.lax.map(q_block, jnp.arange(n_q)).transpose(1, 0, 2, 3, 4, 5)
+    return out.reshape(B, Sq, Hq, hd)
+
+
+def attention_layer(x: jnp.ndarray, p: Dict, cfg: ModelConfig, *,
+                    positions: jnp.ndarray, causal: bool = True,
+                    prefix_len: int = 0,
+                    xa: Optional[jnp.ndarray] = None,
+                    cache: Optional[Dict] = None,
+                    cache_pos: Optional[jnp.ndarray] = None,
+                    return_kv: bool = False):
+    """Full attention sublayer: proj -> rope -> (cache) -> attention -> out.
+
+    ``xa`` switches to cross-attention (K/V from xa, no RoPE, no causal mask).
+    ``cache``: {"k","v"} ring/linear buffers for decode; ``cache_pos`` scalar
+    write index. Returns (out, new_cache_or_None, kv_or_None).
+    """
+    B, S, D = x.shape
+    hd = cfg.resolved_head_dim
+    Hq, Hkv = cfg.n_heads, cfg.n_kv_heads
+    src = xa if xa is not None else x
+
+    # q/k/v constrained on the flattened (H*hd) axis — always divisible by
+    # the model axis even when H itself is not (MQA, kv=4).
+    # §Perf history: replicating K/V over `model` + sharding query SEQUENCE
+    # removed deepseek-prefill's score all-reduces (79.7s -> 42.3s collective)
+    # but moved MORE time into HBM streaming of the replicated K/V
+    # (iterations 1.1/2.3, net regression on every dense prefill cell —
+    # REVERTED). The adopted long-context fix is the Pallas flash kernel
+    # (kernels/flash_attention.py), which keeps score tiles in VMEM; the XLA
+    # fallback below keeps the baseline sharding and lets SPMD choose.
+    q = shard(jnp.einsum("bsd,dh->bsh", x, p["wq"]),
+              ("pod", "data"), None, "model").reshape(B, S, Hq, hd)
+    k = shard(jnp.einsum("bsd,dh->bsh", src, p["wk"]),
+              ("pod", "data"), None, "model").reshape(B, src.shape[1], Hkv, hd)
+    v = shard(jnp.einsum("bsd,dh->bsh", src, p["wv"]),
+              ("pod", "data"), None, "model").reshape(B, src.shape[1], Hkv, hd)
+
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if xa is None:  # self-attention: rotary positions
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    kv_out = (k, v) if return_kv else None
+    if cache is not None:
+        Sc = cache["k"].shape[1]
+        Skv = k.shape[1]
+        if Skv >= Sc and cfg.window > 0:
+            # prefill overflowing a ring buffer: keep only the last Sc keys,
+            # rotated so position p lands in slot p % Sc
+            shift = (cache_pos + Skv) % Sc
+            ck = jnp.roll(k[:, -Sc:], shift, axis=1)
+            cv = jnp.roll(v[:, -Sc:], shift, axis=1)
+        else:
+            write_idx = cache_pos % Sc if cfg.window > 0 else cache_pos
+            ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, write_idx, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, write_idx, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        if S > 1:
+            # prefill: causal compute over the prompt itself (chunked);
+            # the cache is only *written*, not attended
+            out = chunked_attention(q, k, v, cfg, causal=True,
+                                    q_offset=0, kv_offset=0,
+                                    prefix_len=prefix_len)
+        else:
+            kv_len = (jnp.minimum(cache_pos + S, Sc) if cfg.window > 0
+                      else cache_pos + S)
+            out = decode_attention(q, ck, cv, cfg, q_pos=positions,
+                                   kv_len=kv_len, ring=cfg.window > 0,
+                                   cache_pos=cache_pos)
+    else:
+        out = chunked_attention(q, k, v, cfg, causal=causal and xa is None,
+                                prefix_len=prefix_len)
+
+    out = shard(out.reshape(B, S, Hq * hd), ("pod", "data"), None, "model")
+    out = jnp.einsum("bsh,hd->bsd", out.astype(x.dtype), p["wo"])
+    return shard(out, ("pod", "data"), None, None), new_cache, kv_out
+
+
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     cfg: ModelConfig, *, q_pos: jnp.ndarray,
+                     kv_len: jnp.ndarray, ring: bool = False,
+                     cache_pos: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Single-token (or short Sq) attention against a cache.
+
+    Linear in cache length; for ring buffers (SWA) positions are recovered
+    from the ring layout so RoPE'd keys keep their absolute positions.
+    """
+    B, Sq, Hq, hd = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = hd ** -0.5
+    q = q.reshape(B, Sq, Hkv, G, hd).astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bchd->bqhgc", q, kf)
+    slot = jnp.arange(Skv)
+    if ring:
+        # slot i holds absolute position: i + floor((cache_pos - i - 1)/Skv + 1)*Skv
+        # simpler: valid slots are those written in the last `kv_len` steps.
+        age = (cache_pos - slot) % Skv  # steps since written (for current window)
+        valid = age < kv_len
+    else:
+        valid = slot < kv_len
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    s = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqhgc,bchd->bqhgd", s, v.astype(jnp.float32))
+    return out.reshape(B, Sq, Hq, hd)
+
+
+# ---------------------------------------------------------------------------
+# MLP / MoE
+# ---------------------------------------------------------------------------
+
+def mlp(x: jnp.ndarray, p: Dict, cfg: ModelConfig,
+        prefix: str = "w") -> jnp.ndarray:
+    if cfg.mlp_type == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p[f"{prefix}_gate"])
+        h = jnp.einsum("bsd,df->bsf", x, p[f"{prefix}_in"])
+        h = jax.nn.silu(g) * h
+    else:
+        h = jnp.einsum("bsd,df->bsf", x, p[f"{prefix}_in"])
+        h = jax.nn.gelu(h)
+    h = shard(h, ("pod", "data"), None, "model")
+    return jnp.einsum("bsf,fd->bsd", h, p[f"{prefix}_out"])
+
+
+def moe(x: jnp.ndarray, p: Dict, cfg: ModelConfig) -> jnp.ndarray:
+    """Dropped-token top-K MoE with capacity, scatter/gather dispatch.
+
+    One-hot (T,E,C) dispatch tensors (GShard style) would materialize
+    O(T·E·C) floats — hundreds of GB at 1M tokens — so dispatch is a scatter
+    into per-expert capacity slots and combine is the mirror gather. Experts
+    are sharded over `model`; the scatter/gather crossing from token-sharded
+    to expert-sharded layouts is where SPMD inserts the all-to-alls.
+    """
+    from repro.dist.sharding import get_mesh
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    T = B * S
+
+    # Block-LOCAL dispatch: tokens are split into G blocks aligned with the
+    # batch shards; routing, capacity and the scatter/gather all carry the
+    # block as a batch dim, so every device dispatches its own tokens locally
+    # and only the (G, E, C, D) expert buffers cross the mesh (one all-to-all
+    # each way). A single global scatter instead makes GSPMD replicate the
+    # (T*K, D) token tensor on every device (measured: 100+GB temp on the
+    # MoE prefill cells; §Perf-A).
+    mesh = get_mesh()
+    G = 1
+    if mesh is not None:
+        G = mesh.shape.get("pod", 1) * mesh.shape.get("data", 1)
+    if T % G:
+        G = 1
+    Tb = T // G
+    C = max(int(cfg.capacity_factor * Tb * K / E), 1)
+    C = min(C, Tb)
+
+    xt = shard(x.reshape(G, Tb, D), ("pod", "data"), None, None)
+    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    weights, sel = jax.lax.top_k(logits, K)            # (G, Tb, K)
+    weights = jax.nn.softmax(weights, axis=-1)
+
+    onehot = jax.nn.one_hot(sel, E, dtype=jnp.float32)      # (G, Tb, K, E)
+    pos = (jnp.cumsum(onehot.reshape(G, Tb * K, E), axis=1).reshape(G, Tb, K, E)
+           - onehot)
+    pos = jnp.einsum("gtke,gtke->gtk", pos, onehot).astype(jnp.int32)
+    keep = pos < C
+    weights = jnp.where(keep, weights, 0.0)
+
+    # per-block destination slots; overflow drops (capacity per block)
+    dest = jnp.where(keep, sel * C + pos, E * C).reshape(G, Tb * K)
+    src = jnp.broadcast_to(xt[:, :, None, :], (G, Tb, K, D)).reshape(G, Tb * K, D)
+    scatter = jax.vmap(
+        lambda d, s: jnp.zeros((E * C, D), x.dtype).at[d].set(s, mode="drop"))
+    ex_in = scatter(dest, src).reshape(G, E, C, D)
+    # relayout blocks@data -> experts@model: THE all-to-all of MoE
+    ex_in = shard(ex_in, None, "model", None, None)
+
+    if cfg.mlp_type == "swiglu":
+        g = jnp.einsum("gecd,edf->gecf", ex_in, p["w_gate"])
+        h = jnp.einsum("gecd,edf->gecf", ex_in, p["w_in"])
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(jnp.einsum("gecd,edf->gecf", ex_in, p["w_in"]))
+    ex_out = jnp.einsum("gecf,efd->gecd", h, p["w_out"])  # (G, E, C, D)
+    # relayout back: experts@model -> blocks@data
+    ex_out = shard(ex_out, ("pod", "data"), None, None, None)
+
+    gather = jax.vmap(lambda e, d: e.at[d].get(mode="fill", fill_value=0))
+    gathered = gather(ex_out.reshape(G, E * C, D), dest)     # (G, Tb*K, D)
+    out = jnp.einsum("gtkd,gtk->gtd", gathered.reshape(G, Tb, K, D),
+                     weights.astype(x.dtype))
+
+    if cfg.n_shared_experts > 0:
+        out = out + mlp(x, p, cfg, prefix="shared_w").reshape(G, Tb, D)
+    return out.reshape(B, S, D)

@@ -1,0 +1,512 @@
+"""Unified model: parameters, forward, prefill and decode for every family.
+
+Families (``cfg.family``):
+  dense / moe          decoder-only LM (GQA/MQA/SWA attention, MLP or MoE)
+  ssm                  attention-free Mamba2 stack
+  hybrid               jamba-style: scan over groups of ``attn_period``
+                       sublayers (1 attention + N-1 mamba, alternating MoE/MLP)
+  encdec / audio       encoder-decoder; audio frontend is a stub feeding
+                       precomputed frame embeddings
+  vlm                  decoder LM with a visual-prefix stub (patch embeddings)
+
+Layers are stacked (leading L dim) and executed with ``jax.lax.scan`` so HLO
+size / compile time are depth-independent; remat policy per cfg.remat.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import shard
+from repro.models.config import ModelConfig
+from repro.models.layers import attention_layer, mlp, moe, rmsnorm
+from repro.models.ssm import ssm_layer
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Parameter templates
+# ---------------------------------------------------------------------------
+
+def _attn_shapes(cfg: ModelConfig, lead: Tuple[int, ...]) -> Dict[str, Tuple]:
+    hd = cfg.resolved_head_dim
+    s = {
+        "wq": lead + (cfg.d_model, cfg.n_heads * hd),
+        "wk": lead + (cfg.d_model, cfg.n_kv_heads * hd),
+        "wv": lead + (cfg.d_model, cfg.n_kv_heads * hd),
+        "wo": lead + (cfg.n_heads * hd, cfg.d_model),
+    }
+    if cfg.qk_norm:
+        s["q_norm"] = lead + (hd,)
+        s["k_norm"] = lead + (hd,)
+    return s
+
+
+def _mlp_shapes(cfg: ModelConfig, lead: Tuple[int, ...], prefix: str = "w"
+                ) -> Dict[str, Tuple]:
+    s = {f"{prefix}_in": lead + (cfg.d_model, cfg.d_ff),
+         f"{prefix}_out": lead + (cfg.d_ff, cfg.d_model)}
+    if cfg.mlp_type == "swiglu":
+        s[f"{prefix}_gate"] = lead + (cfg.d_model, cfg.d_ff)
+    return s
+
+
+def _moe_shapes(cfg: ModelConfig, lead: Tuple[int, ...]) -> Dict[str, Tuple]:
+    E = cfg.n_experts
+    s = {"router": lead + (cfg.d_model, E),
+         "w_in": lead + (E, cfg.d_model, cfg.d_ff),
+         "w_out": lead + (E, cfg.d_ff, cfg.d_model)}
+    if cfg.mlp_type == "swiglu":
+        s["w_gate"] = lead + (E, cfg.d_model, cfg.d_ff)
+    if cfg.n_shared_experts:
+        s.update(_mlp_shapes(cfg, lead, prefix="shared_w"))
+    return s
+
+
+def _ssm_shapes(cfg: ModelConfig, lead: Tuple[int, ...]) -> Dict[str, Tuple]:
+    N, H = cfg.ssm_state, cfg.n_ssm_heads
+    conv_dim = cfg.d_inner + 2 * N
+    return {
+        "in_proj": lead + (cfg.d_model, 2 * cfg.d_inner + 2 * N + H),
+        "conv_w": lead + (cfg.ssm_conv_width, conv_dim),
+        "A_log": lead + (H,),
+        "dt_bias": lead + (H,),
+        "D": lead + (H,),
+        "norm": lead + (cfg.d_inner,),
+        "out_proj": lead + (cfg.d_inner, cfg.d_model),
+    }
+
+
+def param_shapes(cfg: ModelConfig) -> Dict[str, Tuple]:
+    """Flat {path: shape} for the whole model."""
+    L = cfg.n_layers
+    shapes: Dict[str, Tuple] = {"embed/tok": (cfg.vocab_size, cfg.d_model)}
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        lead = (L,)
+        for k, v in _attn_shapes(cfg, lead).items():
+            shapes[f"layers/attn/{k}"] = v
+        ffn = _moe_shapes(cfg, lead) if cfg.n_experts else _mlp_shapes(cfg, lead)
+        kind = "moe" if cfg.n_experts else "mlp"
+        for k, v in ffn.items():
+            shapes[f"layers/{kind}/{k}"] = v
+        shapes["layers/ln1"] = (L, cfg.d_model)
+        shapes["layers/ln2"] = (L, cfg.d_model)
+
+    elif cfg.family == "ssm":
+        for k, v in _ssm_shapes(cfg, (L,)).items():
+            shapes[f"layers/ssm/{k}"] = v
+        shapes["layers/ln1"] = (L, cfg.d_model)
+
+    elif cfg.family == "hybrid":
+        period = cfg.attn_period
+        ng = L // period
+        n_ssm = period - 1
+        n_moe = sum(1 for j in range(period) if (j % cfg.moe_period)
+                    == cfg.moe_period - 1)
+        n_mlp = period - n_moe
+        for k, v in _attn_shapes(cfg, (ng,)).items():
+            shapes[f"groups/attn/{k}"] = v
+        for k, v in _ssm_shapes(cfg, (ng, n_ssm)).items():
+            shapes[f"groups/ssm/{k}"] = v
+        for k, v in _moe_shapes(cfg, (ng, n_moe)).items():
+            shapes[f"groups/moe/{k}"] = v
+        for k, v in _mlp_shapes(cfg, (ng, n_mlp)).items():
+            shapes[f"groups/mlp/{k}"] = v
+        shapes["groups/ln1"] = (ng, period, cfg.d_model)
+        shapes["groups/ln2"] = (ng, period, cfg.d_model)
+
+    elif cfg.family in ("encdec", "audio"):
+        Le = cfg.n_encoder_layers or L
+        for k, v in _attn_shapes(cfg, (Le,)).items():
+            shapes[f"enc_layers/attn/{k}"] = v
+        for k, v in _mlp_shapes(cfg, (Le,)).items():
+            shapes[f"enc_layers/mlp/{k}"] = v
+        shapes["enc_layers/ln1"] = (Le, cfg.d_model)
+        shapes["enc_layers/ln2"] = (Le, cfg.d_model)
+        shapes["enc_final_norm"] = (cfg.d_model,)
+        for k, v in _attn_shapes(cfg, (L,)).items():
+            shapes[f"dec_layers/attn/{k}"] = v
+        for k, v in _attn_shapes(cfg, (L,)).items():
+            shapes[f"dec_layers/xattn/{k}"] = v
+        for k, v in _mlp_shapes(cfg, (L,)).items():
+            shapes[f"dec_layers/mlp/{k}"] = v
+        shapes["dec_layers/ln1"] = (L, cfg.d_model)
+        shapes["dec_layers/ln_cross"] = (L, cfg.d_model)
+        shapes["dec_layers/ln2"] = (L, cfg.d_model)
+    else:
+        raise ValueError(f"unknown family {cfg.family!r}")
+
+    shapes["final_norm"] = (cfg.d_model,)
+    if not cfg.tie_embeddings:
+        shapes["lm_head"] = (cfg.d_model, cfg.vocab_size)
+    return shapes
+
+
+def _nested(flat: Dict[str, Any]) -> Params:
+    tree: Params = {}
+    for path, value in flat.items():
+        parts = path.split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = value
+    return tree
+
+
+def flat_paths(tree: Params, prefix: str = "") -> Dict[str, Any]:
+    out = {}
+    for k, v in tree.items():
+        path = f"{prefix}/{k}" if prefix else k
+        if isinstance(v, dict):
+            out.update(flat_paths(v, path))
+        else:
+            out[path] = v
+    return out
+
+
+def _init_one(path: str, shape: Tuple, cfg: ModelConfig, key) -> jnp.ndarray:
+    dtype = jnp.dtype(cfg.dtype)
+    last = path.rsplit("/", 1)[-1]
+    if last in ("ln1", "ln2", "ln_cross", "final_norm", "enc_final_norm",
+                "norm", "q_norm", "k_norm"):
+        return jnp.zeros(shape, dtype)          # 1+w convention
+    if last == "A_log":
+        return jnp.log(jnp.linspace(1.0, 16.0, shape[-1], dtype=jnp.float32)
+                       * jnp.ones(shape, jnp.float32)).astype(jnp.float32)
+    if last == "dt_bias":
+        return jnp.full(shape, -4.6, jnp.float32)   # softplus^-1(0.01)
+    if last == "D":
+        return jnp.ones(shape, jnp.float32)
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = 1.0 / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Params:
+    shapes = param_shapes(cfg)
+    root = jax.random.PRNGKey(seed)
+    keys = jax.random.split(root, len(shapes))
+    flat = {p: _init_one(p, s, cfg, k)
+            for (p, s), k in zip(sorted(shapes.items()), keys)}
+    return _nested(flat)
+
+
+def param_structs(cfg: ModelConfig) -> Params:
+    """ShapeDtypeStruct pytree (no allocation) — dry-run / AOT input."""
+    dtype = jnp.dtype(cfg.dtype)
+    f32 = {"A_log", "dt_bias", "D"}
+    flat = {}
+    for p, s in param_shapes(cfg).items():
+        last = p.rsplit("/", 1)[-1]
+        dt = jnp.float32 if last in f32 else dtype
+        flat[p] = jax.ShapeDtypeStruct(s, dt)
+    return _nested(flat)
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def _dense_block(x, lp, cfg: ModelConfig, positions, prefix_len,
+                 cache=None, cache_pos=None, causal=True):
+    """One dense/moe decoder layer; returns (x, new_cache)."""
+    h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    attn_out, new_cache, _ = attention_layer(
+        h, lp["attn"], cfg, positions=positions, causal=causal,
+        prefix_len=prefix_len, cache=cache, cache_pos=cache_pos)
+    x = x + attn_out
+    h = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.n_experts:
+        x = x + moe(h, lp["moe"], cfg)
+    else:
+        x = x + mlp(h, lp["mlp"], cfg)
+    return x, new_cache
+
+
+def _hybrid_group(x, gp, cfg: ModelConfig, positions, cache=None,
+                  cache_pos=None):
+    """One jamba group: `attn_period` sublayers, each mixer+FFN."""
+    period = cfg.attn_period
+    i_ssm = i_moe = i_mlp = 0
+    new_cache: Dict[str, Any] = {"attn": None, "ssm_state": [], "ssm_conv": []}
+    for j in range(period):
+        h = rmsnorm(x, gp["ln1"][j], cfg.norm_eps)
+        if j == cfg.attn_offset:
+            out, c_attn, _ = attention_layer(
+                h, gp["attn"], cfg, positions=positions,
+                cache=cache["attn"] if cache else None, cache_pos=cache_pos)
+            new_cache["attn"] = c_attn
+        else:
+            sp = jax.tree_util.tree_map(lambda a: a[i_ssm], gp["ssm"])
+            sc = (None if cache is None else
+                  {"state": cache["ssm_state"][i_ssm],
+                   "conv": cache["ssm_conv"][i_ssm]})
+            out, c_ssm = ssm_layer(h, sp, cfg, cache=sc)
+            if c_ssm is not None:
+                new_cache["ssm_state"].append(c_ssm["state"])
+                new_cache["ssm_conv"].append(c_ssm["conv"])
+            i_ssm += 1
+        x = x + out
+        h = rmsnorm(x, gp["ln2"][j], cfg.norm_eps)
+        if (j % cfg.moe_period) == cfg.moe_period - 1:
+            mp = jax.tree_util.tree_map(lambda a: a[i_moe], gp["moe"])
+            x = x + moe(h, mp, cfg)
+            i_moe += 1
+        else:
+            pp = jax.tree_util.tree_map(lambda a: a[i_mlp], gp["mlp"])
+            x = x + mlp(h, pp, cfg)
+            i_mlp += 1
+    if cache is not None:
+        new_cache["ssm_state"] = jnp.stack(new_cache["ssm_state"])
+        new_cache["ssm_conv"] = jnp.stack(new_cache["ssm_conv"])
+    return x, new_cache
+
+
+def _run_stack(x, layers_params, cfg: ModelConfig, positions, *,
+               prefix_len: int = 0, causal: bool = True,
+               family: Optional[str] = None, cache=None, cache_pos=None,
+               xa=None, xattn_params=None):
+    """scan over stacked layers. cache (if given) is scanned alongside."""
+    family = family or cfg.family
+
+    def body(carry, inp):
+        x = carry
+        if cache is None:
+            lp = inp
+            c = None
+        else:
+            lp, c = inp
+        if family == "hybrid":
+            x, new_c = _hybrid_group(x, lp, cfg, positions, cache=c,
+                                     cache_pos=cache_pos)
+        elif family == "ssm":
+            h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+            out, new_c = ssm_layer(h, lp["ssm"], cfg, cache=c)
+            x = x + out
+        elif family == "encdec_dec":
+            h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+            sc = c["self"] if c is not None else None
+            out, new_self, _ = attention_layer(
+                h, lp["attn"], cfg, positions=positions, causal=True,
+                cache=sc, cache_pos=cache_pos)
+            x = x + out
+            h = rmsnorm(x, lp["ln_cross"], cfg.norm_eps)
+            if c is not None and "cross" in c:
+                # cross K/V precomputed at prefill: pure read
+                out = _cross_from_cache(h, lp["xattn"], cfg, c["cross"])
+                new_c = {"self": new_self, "cross": c["cross"]}
+            else:
+                out, _, kv = attention_layer(
+                    h, lp["xattn"], cfg, positions=positions, xa=xa,
+                    causal=False, return_kv=c is not None)
+                new_c = None if c is None else {"self": new_self,
+                                                "cross": {"k": kv[0], "v": kv[1]}}
+            x = x + out
+            h = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+            x = x + mlp(h, lp["mlp"], cfg)
+        else:  # dense / moe / vlm / encoder
+            x, new_c = _dense_block(x, lp, cfg, positions, prefix_len,
+                                    cache=c, cache_pos=cache_pos,
+                                    causal=causal)
+        return x, new_c
+
+    body = _remat(body, cfg)
+    xs = layers_params if cache is None else (layers_params, cache)
+    x, new_cache = jax.lax.scan(body, x, xs)
+    return x, new_cache
+
+
+def _cross_from_cache(x, p, cfg: ModelConfig, cross):
+    from repro.models.layers import decode_attention
+    B, S, D = x.shape
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(B, S, cfg.n_heads, hd)
+    out = decode_attention(q, cross["k"], cross["v"], cfg,
+                           q_pos=jnp.zeros((S,), jnp.int32),
+                           kv_len=jnp.array(cross["k"].shape[1]))
+    out = jnp.einsum("bsh,hd->bsd",
+                     out.reshape(B, S, cfg.n_heads * hd).astype(x.dtype),
+                     p["wo"])
+    return out
+
+
+def _embed(cfg: ModelConfig, params: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+    x = jnp.take(params["embed"]["tok"], tokens, axis=0)
+    return shard(x * np.sqrt(cfg.d_model).astype(np.float32),
+                 ("pod", "data"), None, None).astype(jnp.dtype(cfg.dtype))
+
+
+def _unembed(cfg: ModelConfig, params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = (params["embed"]["tok"].T if cfg.tie_embeddings
+            else params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    return shard(logits, ("pod", "data"), None, "model")
+
+
+def forward(cfg: ModelConfig, params: Params, batch: Dict[str, jnp.ndarray]
+            ) -> jnp.ndarray:
+    """Training/prefill forward -> logits over the decoder token stream."""
+    if cfg.family in ("encdec", "audio"):
+        frames = batch["frames"].astype(jnp.dtype(cfg.dtype))
+        frames = shard(frames, ("pod", "data"), None, None)
+        enc_pos = jnp.arange(frames.shape[1])
+        enc, _ = _run_stack(frames, params["enc_layers"], cfg, enc_pos,
+                            causal=False, family="dense")
+        enc = rmsnorm(enc, params["enc_final_norm"], cfg.norm_eps)
+        tokens = batch["tokens"]
+        x = _embed(cfg, params, tokens)
+        dec_pos = jnp.arange(tokens.shape[1])
+        x, _ = _run_stack(x, params["dec_layers"], cfg, dec_pos,
+                          family="encdec_dec", xa=enc)
+        return _unembed(cfg, params, x)
+
+    if cfg.family == "vlm":
+        patches = batch["patches"].astype(jnp.dtype(cfg.dtype))
+        patches = shard(patches, ("pod", "data"), None, None)
+        tok_x = _embed(cfg, params, batch["tokens"])
+        x = jnp.concatenate([patches, tok_x], axis=1)
+        positions = jnp.arange(x.shape[1])
+        x, _ = _run_stack(x, params["layers"], cfg, positions,
+                          prefix_len=cfg.n_prefix_tokens, family="dense")
+        x = x[:, cfg.n_prefix_tokens:]
+        return _unembed(cfg, params, x)
+
+    tokens = batch["tokens"]
+    x = _embed(cfg, params, tokens)
+    positions = jnp.arange(tokens.shape[1])
+    key = "groups" if cfg.family == "hybrid" else "layers"
+    x, _ = _run_stack(x, params[key], cfg, positions)
+    return _unembed(cfg, params, x)
+
+
+# ---------------------------------------------------------------------------
+# KV / state caches + decode
+# ---------------------------------------------------------------------------
+
+def cache_shapes(cfg: ModelConfig, batch: int, max_len: int,
+                 enc_len: int = 0) -> Dict[str, Tuple[Tuple, Any]]:
+    """Flat {path: (shape, dtype)} for the decode cache."""
+    dtype = jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+    kv_len = min(max_len, cfg.window) if cfg.window else max_len
+    out: Dict[str, Tuple[Tuple, Any]] = {}
+    L = cfg.n_layers
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        out["k"] = ((L, batch, kv_len, cfg.n_kv_heads, hd), dtype)
+        out["v"] = ((L, batch, kv_len, cfg.n_kv_heads, hd), dtype)
+    elif cfg.family == "ssm":
+        H, P, N = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+        conv_dim = cfg.d_inner + 2 * N
+        out["state"] = ((L, batch, H, N, P), jnp.float32)
+        out["conv"] = ((L, batch, cfg.ssm_conv_width - 1, conv_dim), dtype)
+    elif cfg.family == "hybrid":
+        ng = L // cfg.attn_period
+        n_ssm = cfg.attn_period - 1
+        H, P, N = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+        conv_dim = cfg.d_inner + 2 * N
+        out["attn/k"] = ((ng, batch, kv_len, cfg.n_kv_heads, hd), dtype)
+        out["attn/v"] = ((ng, batch, kv_len, cfg.n_kv_heads, hd), dtype)
+        out["ssm_state"] = ((ng, n_ssm, batch, H, N, P), jnp.float32)
+        out["ssm_conv"] = ((ng, n_ssm, batch, cfg.ssm_conv_width - 1, conv_dim), dtype)
+    elif cfg.family in ("encdec", "audio"):
+        out["self/k"] = ((L, batch, kv_len, cfg.n_kv_heads, hd), dtype)
+        out["self/v"] = ((L, batch, kv_len, cfg.n_kv_heads, hd), dtype)
+        out["cross/k"] = ((L, batch, enc_len, cfg.n_kv_heads, hd), dtype)
+        out["cross/v"] = ((L, batch, enc_len, cfg.n_kv_heads, hd), dtype)
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, enc_len: int = 0):
+    flat = {p: jnp.zeros(s, d)
+            for p, (s, d) in cache_shapes(cfg, batch, max_len, enc_len).items()}
+    return _nested(flat)
+
+
+def cache_structs(cfg: ModelConfig, batch: int, max_len: int, enc_len: int = 0):
+    flat = {p: jax.ShapeDtypeStruct(s, d)
+            for p, (s, d) in cache_shapes(cfg, batch, max_len, enc_len).items()}
+    return _nested(flat)
+
+
+def decode_step(cfg: ModelConfig, params: Params, token: jnp.ndarray,
+                cache, pos: jnp.ndarray):
+    """One decode step: token (B, 1) + cache at position ``pos`` -> (logits, cache').
+
+    Works for every family; encoder-decoder models read precomputed cross K/V
+    from the cache (encoder runs once at prefill)."""
+    x = _embed(cfg, params, token)
+    positions = pos + jnp.arange(token.shape[1])
+
+    if cfg.family in ("encdec", "audio"):
+        x, new_cache = _run_stack(x, params["dec_layers"], cfg, positions,
+                                  family="encdec_dec", cache=cache,
+                                  cache_pos=pos)
+        return _unembed(cfg, params, x)[:, -1], new_cache
+
+    key = "groups" if cfg.family == "hybrid" else "layers"
+    x, new_cache = _run_stack(x, params[key], cfg, positions,
+                              cache=cache, cache_pos=pos)
+    return _unembed(cfg, params, x)[:, -1], new_cache
+
+
+def prefill(cfg: ModelConfig, params: Params, batch: Dict[str, jnp.ndarray],
+            max_len: int):
+    """Run the prompt, returning (last-token logits, filled cache).
+
+    Implemented as forward + cache write-out; attention stays chunked."""
+    # For simplicity and dry-run purposes we reuse decode-path plumbing with
+    # S = prompt length: caches are written at positions [0, S).
+    if cfg.family in ("encdec", "audio"):
+        frames = batch["frames"].astype(jnp.dtype(cfg.dtype))
+        enc_pos = jnp.arange(frames.shape[1])
+        enc, _ = _run_stack(frames, params["enc_layers"], cfg, enc_pos,
+                            causal=False, family="dense")
+        enc = rmsnorm(enc, params["enc_final_norm"], cfg.norm_eps)
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        # pass only the self-attention cache: the cross K/V are COMPUTED from
+        # the encoder output during this pass and returned in the new cache
+        cache = init_cache(cfg, B, max_len, enc_len=frames.shape[1])
+        x = _embed(cfg, params, tokens)
+        x, cache = _run_stack(x, params["dec_layers"], cfg, jnp.arange(S),
+                              family="encdec_dec", cache={"self": cache["self"]},
+                              cache_pos=jnp.array(0), xa=enc)
+        # unembed the LAST position only — prefill never needs (B,S,V) logits
+        return _unembed(cfg, params, x[:, -1:])[:, 0], cache
+
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    prefix = 0
+    x = _embed(cfg, params, tokens)
+    if cfg.family == "vlm":  # visual prefix precedes the text prompt
+        patches = batch["patches"].astype(jnp.dtype(cfg.dtype))
+        patches = shard(patches, ("pod", "data"), None, None)
+        x = jnp.concatenate([patches, x], axis=1)
+        prefix = cfg.n_prefix_tokens
+        S = S + prefix
+    cache = init_cache(cfg, B, max_len + prefix)
+    key = "groups" if cfg.family == "hybrid" else "layers"
+    x, cache = _run_stack(x, params[key], cfg, jnp.arange(S),
+                          prefix_len=prefix, cache=cache,
+                          cache_pos=jnp.array(0))
+    # unembed the LAST position only — prefill never needs (B,S,V) logits
+    return _unembed(cfg, params, x[:, -1:])[:, 0], cache

@@ -1,0 +1,173 @@
+"""Mamba2 / SSD (state-space duality) layer — chunked scan + O(1) decode.
+
+Train/prefill use the SSD chunked algorithm (quadratic attention-like math
+inside fixed-size chunks, linear recurrence across chunks), which maps onto
+the MXU as batched matmuls. Decode keeps a constant-size (H, P, N) state per
+layer — this is why the SSM/hybrid architectures are the ones that run the
+``long_500k`` cells (DESIGN.md §5).
+
+Parameter layout per layer (stacked over L in the model):
+  in_proj: (D, 2*d_inner + 2*G*N + H)   [z | x | B | C | dt]
+  conv_w : (K, d_inner + 2*G*N)         depthwise causal conv
+  A_log, dt_bias, D: (H,)
+  norm   : (d_inner,)  gated RMSNorm before out_proj
+  out_proj: (d_inner, D)
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from repro.models.config import ModelConfig
+
+G = 1  # B/C groups (mamba2 default: single group broadcast over heads)
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jnp.ndarray):
+    d_in = cfg.d_inner
+    N = cfg.ssm_state
+    H = cfg.n_ssm_heads
+    z, xs, B, C, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + G * N, 2 * d_in + 2 * G * N], axis=-1)
+    return z, xs, B, C, dt
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray,
+                 cache: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv. x: (B,S,Cd), w: (K,Cd). Returns (y, new_cache)."""
+    K = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = cache
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+K-1, Cd)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    new_cache = xp[:, -(K - 1):] if K > 1 else pad
+    return y, new_cache
+
+
+def ssd_chunked(xh: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                Bm: jnp.ndarray, Cm: jnp.ndarray, chunk: int,
+                init_state: Optional[jnp.ndarray] = None):
+    """SSD over chunks. xh: (B,S,H,P); dt: (B,S,H); A: (H,) (negative);
+    Bm, Cm: (B,S,N) (group broadcast over heads). Returns (y, final_state)."""
+    Bb, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    while S % Q:  # largest divisor <= requested chunk (exact tiling)
+        Q -= 1
+    nc = S // Q
+
+    xd = (xh * dt[..., None]).reshape(Bb, nc, Q, H, P)
+    dA = (dt * A).reshape(Bb, nc, Q, H)                     # (B,nc,Q,H) ≤ 0
+    cs = jnp.cumsum(dA, axis=2)                             # within-chunk cumsum
+    Bc = Bm.reshape(Bb, nc, Q, N)
+    Cc = Cm.reshape(Bb, nc, Q, N)
+
+    # intra-chunk (quadratic in Q): L[i,j] = exp(cs_i - cs_j) for i >= j
+    rel = cs[:, :, :, None, :] - cs[:, :, None, :, :]       # (B,nc,Q,Q,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    rel = jnp.where(mask[None, None, :, :, None], rel, -1e30)  # mask pre-exp
+    L = jnp.exp(rel)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)          # (B,nc,Q,Q)
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp", scores, L, xd)
+
+    # chunk-final states: S_c = sum_j exp(cs_Q - cs_j) B_j x_j^T
+    decay_to_end = jnp.exp(cs[:, :, -1:, :] - cs)           # (B,nc,Q,H)
+    S_c = jnp.einsum("bcjh,bcjn,bcjhp->bchnp", decay_to_end, Bc, xd)
+
+    # inter-chunk linear recurrence over nc
+    chunk_decay = jnp.exp(cs[:, :, -1, :])                  # (B,nc,H)
+
+    def step(state, inp):
+        S_c_t, decay_t = inp                                # (B,H,N,P), (B,H)
+        out_state = state                                   # state BEFORE chunk
+        state = state * decay_t[..., None, None] + S_c_t
+        return state, out_state
+
+    init = (jnp.zeros((Bb, H, N, P), jnp.float32) if init_state is None
+            else init_state.astype(jnp.float32))
+    final_state, prev_states = jax.lax.scan(
+        step, init,
+        (S_c.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+         chunk_decay.transpose(1, 0, 2).astype(jnp.float32)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)      # (B,nc,H,N,P)
+
+    # inter-chunk contribution: C_i · (decay_i * state_prev)
+    decay_in = jnp.exp(cs)                                   # (B,nc,Q,H)
+    y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp", Cc, decay_in,
+                         prev_states.astype(Cc.dtype))
+    y = (y_intra + y_inter).reshape(Bb, S, H, P)
+    return y, final_state
+
+
+def ssm_layer(x: jnp.ndarray, p: Dict, cfg: ModelConfig,
+              cache: Optional[Dict] = None) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Full Mamba2 block. cache={"state": (B,H,N,P), "conv": (B,K-1,Cd)}."""
+    Bb, S, D = x.shape
+    H, P, N = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["in_proj"])
+    z, xs, Bm, Cm, dt = _split_proj(cfg, zxbcdt)
+
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"],
+                                      cache["conv"] if cache else None)
+    conv_out = jax.nn.silu(conv_out)
+    xs = conv_out[..., :cfg.d_inner]
+    Bm = conv_out[..., cfg.d_inner:cfg.d_inner + G * N]
+    Cm = conv_out[..., cfg.d_inner + G * N:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                  # (H,)
+    xh = xs.reshape(Bb, S, H, P)
+    xh = shard(xh, ("pod", "data"), None, "model", None)
+
+    if cache is None:
+        y, _ = ssd_chunked(xh.astype(jnp.float32), dt, A,
+                           Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                           cfg.ssm_chunk)
+        new_cache = None
+    elif S > 1:
+        # prefill: chunked SSD over the whole prompt (NOT the recurrent
+        # per-token scan — that is O(S) sequential full-state round-trips,
+        # measured as a ~2000s memory term on jamba prefill; §Perf-A),
+        # carrying the state in/out of the cache.
+        y, final_state = ssd_chunked(xh.astype(jnp.float32), dt, A,
+                                     Bm.astype(jnp.float32),
+                                     Cm.astype(jnp.float32), cfg.ssm_chunk,
+                                     init_state=cache["state"])
+        new_cache = {"state": final_state, "conv": new_conv}
+    else:
+        # O(1) recurrent decode (S is 1, or small): per-step state update
+        def step(state, inp):
+            xh_t, dt_t, B_t, C_t = inp
+            dA = jnp.exp(dt_t * A)                                # (B,H)
+            dBx = jnp.einsum("bh,bn,bhp->bhnp", dt_t, B_t, xh_t)
+            state = state * dA[..., None, None] + dBx
+            y_t = jnp.einsum("bn,bhnp->bhp", C_t, state)
+            return state, y_t
+
+        state = cache["state"].astype(jnp.float32)
+        state, ys = jax.lax.scan(
+            step, state,
+            (xh.transpose(1, 0, 2, 3).astype(jnp.float32),
+             dt.transpose(1, 0, 2),
+             Bm.transpose(1, 0, 2).astype(jnp.float32),
+             Cm.transpose(1, 0, 2).astype(jnp.float32)))
+        y = ys.transpose(1, 0, 2, 3)                              # (B,S,H,P)
+        new_cache = {"state": state, "conv": new_conv}
+
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(Bb, S, cfg.d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    # gated RMSNorm (mamba2 places a norm before out_proj)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps)
+         * (1.0 + p["norm"])).astype(x.dtype)
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"])
+    return shard(out, ("pod", "data"), None, None), new_cache

@@ -1,0 +1,3 @@
+from repro.optim.adamw import AdamWConfig, OptState, global_norm, init, schedule, update
+
+__all__ = ["AdamWConfig", "OptState", "global_norm", "init", "schedule", "update"]

@@ -1,0 +1,50 @@
+"""Batched serving: prefill + greedy decode over the unified model API."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.model import decode_step, prefill
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int):
+    def prefill_step(params, batch):
+        return prefill(cfg, params, batch, max_len=max_len)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """serve_step(params, cache, token (B,1), pos) -> (next_token, logits, cache')."""
+
+    def serve_step(params, cache, token, pos):
+        logits, new_cache = decode_step(cfg, params, token, cache, pos)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_token, logits, new_cache
+
+    return serve_step
+
+
+class ServeEngine:
+    """Minimal batched engine: prefill once, then greedy decode N tokens."""
+
+    def __init__(self, cfg: ModelConfig, params, max_len: int):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self._prefill = jax.jit(make_prefill_step(cfg, max_len))
+        self._step = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
+
+    def generate(self, batch: Dict[str, jnp.ndarray], n_tokens: int):
+        last_logits, cache = self._prefill(self.params, batch)
+        token = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)[:, None]
+        pos = jnp.asarray(batch["tokens"].shape[1], jnp.int32)
+        out = [token]
+        for _ in range(n_tokens - 1):
+            token, _, cache = self._step(self.params, cache, token, pos)
+            pos = pos + 1
+            out.append(token)
+        return jnp.concatenate(out, axis=1)

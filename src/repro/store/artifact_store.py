@@ -1,0 +1,199 @@
+"""ArtifactStore — manifests binding the CAS + delta compression to lineage nodes.
+
+Committing an artifact produces a *manifest* (JSON, itself CAS-stored):
+
+    {name, model_type, graph, metadata, depth,
+     params: {key: {kind: "full", tensor: <hash>}
+                  | {kind: "delta", blob: <hash>, parent_ref, parent_key,
+                     codec, eps, shape, dtype}}}
+
+Full tensors dedup automatically through content hashing; delta entries point
+at their parent manifest and decompress recursively up the chain to the first
+non-delta ancestor (paper §4). ``max_chain_depth`` bounds reconstruction
+latency, like git packfile delta-depth limits (beyond-paper knob).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from collections import OrderedDict
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.common.hashing import bytes_hash, tensor_hash
+from repro.core.artifact import ModelArtifact
+from repro.core.graphir import LayerGraph
+from repro.store.cas import CAS
+from repro.store.delta import (CompressResult, decompress_param,
+                               delta_compression)
+
+
+class ArtifactStore:
+    """The ``store`` object a :class:`repro.core.LineageGraph` plugs into."""
+
+    def __init__(self, root: Optional[str] = None, codec: str = "lzma",
+                 eps: float = 1e-4, t_thr: float = 0.5,
+                 delta_enabled: bool = True, per_param: bool = True,
+                 max_chain_depth: int = 8, cache_size: int = 4,
+                 zero_frac_prefilter: float = 0.0,
+                 backend: Optional[str] = None) -> None:
+        self.cas = CAS(root)
+        self.codec = codec
+        self.eps = eps
+        self.t_thr = t_thr
+        self.delta_enabled = delta_enabled
+        self.per_param = per_param
+        self.max_chain_depth = max_chain_depth
+        self.zero_frac_prefilter = zero_frac_prefilter
+        self.backend = backend
+        self._manifests: Dict[str, Dict[str, Any]] = {}
+        self._cache: "OrderedDict[str, ModelArtifact]" = OrderedDict()
+        self._cache_size = cache_size
+        self.logical_bytes = 0
+        self.last_result: Optional[CompressResult] = None
+        self._stats_path = (os.path.join(root, "store_stats.json")
+                            if root else None)
+        if self._stats_path and os.path.exists(self._stats_path):
+            with open(self._stats_path) as f:
+                self.logical_bytes = json.load(f).get("logical_bytes", 0)
+
+    # -- commit -----------------------------------------------------------------
+    def commit_artifact(self, name: str, artifact: ModelArtifact,
+                        parent_ref: Optional[str] = None,
+                        tests: Sequence = ()) -> str:
+        self.logical_bytes += artifact.nbytes()
+        self._persist_stats()
+        entries: Dict[str, Any] = {}
+        depth = 0
+
+        deltas = {}
+        if self.delta_enabled and parent_ref is not None:
+            parent_manifest = self.get_manifest(parent_ref)
+            if parent_manifest["depth"] < self.max_chain_depth:
+                parent = self.load_artifact(parent_ref)
+                result = delta_compression(
+                    artifact, parent, t_thr=self.t_thr, eps=self.eps,
+                    codec=self.codec, tests=tests, per_param=self.per_param,
+                    zero_frac_prefilter=self.zero_frac_prefilter,
+                    backend=self.backend)
+                self.last_result = result
+                if result.accepted:
+                    deltas = result.deltas
+                    depth = parent_manifest["depth"] + 1
+                    # persist the *reconstructed* model as this version's truth
+                    artifact = result.reconstructed
+
+        for key, value in artifact.params.items():
+            value = np.asarray(value)
+            if key in deltas:
+                d = deltas[key]
+                blob_hash = self.cas.put_bytes(d.blob)
+                entries[key] = {"kind": "delta", "blob": blob_hash,
+                                "parent_ref": parent_ref,
+                                "parent_key": d.parent_key, "codec": d.codec,
+                                "eps": d.eps, "shape": list(d.shape),
+                                "dtype": d.dtype, "qdtype": d.qdtype}
+            else:
+                thash = tensor_hash(value)  # content-based hashing dedup
+                self.cas.put_tensor(value, key=thash)
+                entries[key] = {"kind": "full", "tensor": thash,
+                                "shape": list(value.shape),
+                                "dtype": str(value.dtype)}
+
+        delta_parents = sorted({e["parent_ref"] for e in entries.values()
+                                if e["kind"] == "delta"})
+        for pref in delta_parents:
+            self.cas.incref(pref)  # chain dependency: parent must outlive child
+        manifest = {
+            "name": name,
+            "model_type": artifact.model_type,
+            "metadata": artifact.metadata,
+            "graph": artifact.graph.to_json(),
+            "params": entries,
+            "depth": depth,
+            "delta_parents": delta_parents,
+        }
+        payload = json.dumps(manifest, sort_keys=True, default=str).encode()
+        ref = self.cas.put_bytes(payload, key="m_" + bytes_hash(payload))
+        self._manifests[ref] = manifest
+        return ref
+
+    # -- load --------------------------------------------------------------------
+    def get_manifest(self, ref: str) -> Dict[str, Any]:
+        if ref not in self._manifests:
+            self._manifests[ref] = json.loads(self.cas.get_bytes(ref))
+        return self._manifests[ref]
+
+    def load_artifact(self, ref: str) -> ModelArtifact:
+        if ref in self._cache:
+            self._cache.move_to_end(ref)
+            return self._cache[ref]
+        manifest = self.get_manifest(ref)
+        params: Dict[str, np.ndarray] = {}
+        parent_cache: Dict[str, ModelArtifact] = {}
+        for key, e in manifest["params"].items():
+            if e["kind"] == "full":
+                params[key] = self.cas.get_tensor(e["tensor"])
+            else:
+                pref = e["parent_ref"]
+                if pref not in parent_cache:
+                    parent_cache[pref] = self.load_artifact(pref)  # recursive chain
+                parent_val = parent_cache[pref].params[e["parent_key"]]
+                from repro.store.delta import ParamDelta
+                d = ParamDelta(child_key=key, parent_key=e["parent_key"],
+                               blob=self.cas.get_bytes(e["blob"]),
+                               codec=e["codec"], eps=e["eps"],
+                               shape=tuple(e["shape"]), dtype=e["dtype"],
+                               raw_bytes=0, qdtype=e.get("qdtype", "int32"))
+                params[key] = decompress_param(np.asarray(parent_val), d,
+                                               backend=self.backend)
+        artifact = ModelArtifact(
+            graph=LayerGraph.from_json(manifest["graph"]),
+            params=params,
+            model_type=manifest.get("model_type", "generic"),
+            metadata=manifest.get("metadata", {}),
+        )
+        self._cache[ref] = artifact
+        while len(self._cache) > self._cache_size:
+            self._cache.popitem(last=False)
+        return artifact
+
+    # -- lifecycle ------------------------------------------------------------------
+    def release(self, ref: str) -> None:
+        """Drop one reference to a manifest and everything it points at."""
+        try:
+            manifest = self.get_manifest(ref)
+        except Exception:
+            return
+        for e in manifest["params"].values():
+            self.cas.decref(e["tensor"] if e["kind"] == "full" else e["blob"])
+        for pref in manifest.get("delta_parents", []):
+            self.cas.decref(pref)
+        self.cas.decref(ref)
+        self._cache.pop(ref, None)
+
+    def gc(self) -> int:
+        return self.cas.gc()
+
+    def _persist_stats(self) -> None:
+        if self._stats_path is None:
+            return
+        tmp = self._stats_path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"logical_bytes": self.logical_bytes}, f)
+        os.replace(tmp, self._stats_path)
+
+    # -- accounting -------------------------------------------------------------------
+    def compression_ratio(self) -> float:
+        return self.logical_bytes / max(self.cas.physical_bytes(), 1)
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "logical_bytes": self.logical_bytes,
+            "physical_bytes": self.cas.physical_bytes(),
+            "compression_ratio": self.compression_ratio(),
+            "objects": self.cas.object_count(),
+            **self.cas.stats,
+        }

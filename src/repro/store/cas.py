@@ -1,0 +1,144 @@
+"""Content-addressable store with refcounting (paper §4, content-based hashing).
+
+Objects (tensors, delta blobs, manifests) are keyed by SHA-256 — writing the
+same content twice costs nothing, which is exactly how parameters shared
+across lineage-graph models are stored once. Supports a directory backend
+(one file per object + a refcount journal) and an in-memory backend for
+tests/benchmarks. All commits are atomic (tmp + rename).
+"""
+
+from __future__ import annotations
+
+import io
+import json
+import os
+import threading
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.common.hashing import bytes_hash, tensor_hash
+
+
+class CAS:
+    def __init__(self, root: Optional[str] = None) -> None:
+        self.root = root
+        self._mem: Dict[str, bytes] = {}
+        self.refcounts: Dict[str, int] = {}
+        self._lock = threading.Lock()
+        self.stats = {"puts": 0, "dedup_hits": 0, "bytes_written": 0,
+                      "bytes_deduped": 0}
+        if root is not None:
+            os.makedirs(os.path.join(root, "objects"), exist_ok=True)
+            rc = os.path.join(root, "refcounts.json")
+            if os.path.exists(rc):
+                with open(rc) as f:
+                    self.refcounts = json.load(f)
+
+    # -- raw object interface ------------------------------------------------
+    def _obj_path(self, key: str) -> str:
+        return os.path.join(self.root, "objects", key)
+
+    def has(self, key: str) -> bool:
+        if self.root is None:
+            return key in self._mem
+        return key in self.refcounts or os.path.exists(self._obj_path(key))
+
+    def put_bytes(self, data: bytes, key: Optional[str] = None) -> str:
+        key = key or bytes_hash(data)
+        with self._lock:
+            self.stats["puts"] += 1
+            if self.has(key):
+                self.stats["dedup_hits"] += 1
+                self.stats["bytes_deduped"] += len(data)
+                self.refcounts[key] = self.refcounts.get(key, 0) + 1
+                return key
+            if self.root is None:
+                self._mem[key] = data
+            else:
+                tmp = self._obj_path(key) + ".tmp"
+                with open(tmp, "wb") as f:
+                    f.write(data)
+                os.replace(tmp, self._obj_path(key))
+            self.stats["bytes_written"] += len(data)
+            self.refcounts[key] = self.refcounts.get(key, 0) + 1
+            return key
+
+    def get_bytes(self, key: str) -> bytes:
+        if self.root is None:
+            return self._mem[key]
+        with open(self._obj_path(key), "rb") as f:
+            return f.read()
+
+    def size(self, key: str) -> int:
+        if self.root is None:
+            return len(self._mem[key])
+        return os.path.getsize(self._obj_path(key))
+
+    # -- tensors ---------------------------------------------------------------
+    def put_tensor(self, arr: np.ndarray, key: Optional[str] = None) -> str:
+        """Store a tensor (npy-serialized); key is its content hash."""
+        arr = np.asarray(arr)
+        key = key or tensor_hash(arr)
+        if self.has(key):  # avoid serializing at all on a dedup hit
+            with self._lock:
+                self.stats["puts"] += 1
+                self.stats["dedup_hits"] += 1
+                self.stats["bytes_deduped"] += arr.nbytes
+                self.refcounts[key] = self.refcounts.get(key, 0) + 1
+            return key
+        buf = io.BytesIO()
+        np.save(buf, arr, allow_pickle=False)
+        return self.put_bytes(buf.getvalue(), key=key)
+
+    def get_tensor(self, key: str) -> np.ndarray:
+        return np.load(io.BytesIO(self.get_bytes(key)), allow_pickle=False)
+
+    # -- refcounting / GC --------------------------------------------------------
+    def incref(self, key: str) -> None:
+        with self._lock:
+            self.refcounts[key] = self.refcounts.get(key, 0) + 1
+
+    def decref(self, key: str) -> None:
+        with self._lock:
+            if key not in self.refcounts:
+                return
+            self.refcounts[key] -= 1
+
+    def gc(self) -> int:
+        """Delete unreferenced objects; returns bytes reclaimed."""
+        reclaimed = 0
+        with self._lock:
+            dead = [k for k, c in self.refcounts.items() if c <= 0]
+            for k in dead:
+                if self.root is None:
+                    reclaimed += len(self._mem.pop(k, b""))
+                else:
+                    p = self._obj_path(k)
+                    if os.path.exists(p):
+                        reclaimed += os.path.getsize(p)
+                        os.remove(p)
+                del self.refcounts[k]
+        self._persist_refcounts()
+        return reclaimed
+
+    def _persist_refcounts(self) -> None:
+        if self.root is None:
+            return
+        tmp = os.path.join(self.root, "refcounts.json.tmp")
+        with open(tmp, "w") as f:
+            json.dump(self.refcounts, f)
+        os.replace(tmp, os.path.join(self.root, "refcounts.json"))
+
+    # -- accounting ---------------------------------------------------------------
+    def physical_bytes(self) -> int:
+        if self.root is None:
+            return sum(len(v) for v in self._mem.values())
+        objdir = os.path.join(self.root, "objects")
+        return sum(os.path.getsize(os.path.join(objdir, f))
+                   for f in os.listdir(objdir) if not f.endswith(".tmp"))
+
+    def object_count(self) -> int:
+        if self.root is None:
+            return len(self._mem)
+        return len(os.listdir(os.path.join(self.root, "objects")))

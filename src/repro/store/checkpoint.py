@@ -1,0 +1,206 @@
+"""Distributed checkpoint manager — MGit versioning as a training substrate.
+
+Every ``save(step, state)`` cut becomes a *version node* in a lineage graph
+whose storage flows through the CAS + delta compression: consecutive training
+checkpoints differ by one optimizer excursion, which is exactly the
+sparse-delta regime Algorithm 1 exploits, and frozen tensors (embeddings in
+finetuning, shared MTL trunks) dedup to zero marginal bytes.
+
+Fault tolerance:
+* commits are atomic — the ``LATEST`` pointer moves only after the manifest
+  and every object are durably written, so a crash mid-save is invisible;
+* ``restore(verify=True)`` recomputes content hashes (bit-rot detection);
+* ``restore_sharded`` re-lays the checkpoint out on a *different* mesh
+  (elastic scaling after node loss — shardings come from the target, not the
+  writer);
+* saves run on a background thread against a host snapshot, overlapping the
+  next training step (async checkpointing).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.common.hashing import tensor_hash
+from repro.core.artifact import ModelArtifact
+from repro.core.graphir import LayerGraph, LayerNode
+from repro.core.lineage import LineageGraph
+from repro.store.artifact_store import ArtifactStore
+
+
+def flatten_state(state) -> Dict[str, np.ndarray]:
+    """Pytree -> flat {path: host ndarray}. Gathers from device (blocking)."""
+    flat = {}
+    leaves = jax.tree_util.tree_flatten_with_path(state)[0]
+    for path, leaf in leaves:
+        key = jax.tree_util.keystr(path, simple=True, separator="/")
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def unflatten_state(template, flat: Dict[str, np.ndarray]):
+    """Inverse of flatten_state given a structure/ShapeDtypeStruct template."""
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths:
+        key = jax.tree_util.keystr(path, simple=True, separator="/")
+        value = flat[key]
+        dtype = getattr(leaf, "dtype", None)
+        if dtype is not None and str(value.dtype) != str(dtype):
+            value = value.astype(dtype)
+        leaves.append(value)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def state_graph(flat: Dict[str, np.ndarray], model_type: str) -> LayerGraph:
+    """Chain LayerGraph over state entries (checkpoints are sequenced by path)."""
+    nodes = []
+    for key, value in flat.items():
+        layer, _, param = key.rpartition("/")
+        nodes.append((layer or key, param or "value", value))
+    g = LayerGraph()
+    prev = None
+    for layer, param, value in nodes:
+        if layer not in g.nodes:
+            g.add_node(LayerNode(layer, "state"))
+            if prev is not None:
+                g.add_edge(prev, layer)
+            prev = layer
+        g.nodes[layer].params[param] = (tuple(np.shape(value)), str(np.asarray(value).dtype))
+    return g
+
+
+class CheckpointManager:
+    def __init__(self, directory: Optional[str], model_name: str = "model",
+                 codec: str = "lzma", eps: float = 1e-4,
+                 delta_enabled: bool = True, async_save: bool = True,
+                 max_chain_depth: int = 8, store: Optional[ArtifactStore] = None,
+                 lineage: Optional[LineageGraph] = None) -> None:
+        self.model_name = model_name
+        self.store = store or ArtifactStore(
+            root=directory, codec=codec, eps=eps, t_thr=float("inf"),
+            delta_enabled=delta_enabled, max_chain_depth=max_chain_depth)
+        self.lineage = lineage or LineageGraph(path=directory, store=self.store)
+        self.async_save = async_save
+        self._queue: "queue.Queue" = queue.Queue()
+        self._worker: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # -- naming ----------------------------------------------------------------
+    def _node_name(self, step: int) -> str:
+        return f"{self.model_name}/step{step}"
+
+    def latest_step(self) -> Optional[int]:
+        steps = [
+            int(n.rsplit("step", 1)[1]) for n in self.lineage.nodes
+            if n.startswith(self.model_name + "/step")
+            and self.lineage.nodes[n].artifact_ref is not None
+        ]
+        return max(steps) if steps else None
+
+    # -- save ---------------------------------------------------------------------
+    def save(self, step: int, state: Any, blocking: Optional[bool] = None) -> str:
+        """Snapshot ``state`` (pytree) as version ``step``. Returns node name.
+
+        The device->host gather happens synchronously (the state is immutable
+        after that point); hashing/compression/IO run on the worker thread.
+        """
+        self._check_error()
+        flat = flatten_state(state)
+        name = self._node_name(step)
+        if blocking is None:
+            blocking = not self.async_save
+        if blocking:
+            self._commit(step, name, flat)
+        else:
+            self._start_worker()
+            self._queue.put((step, name, flat))
+        return name
+
+    def _commit(self, step: int, name: str, flat: Dict[str, np.ndarray]) -> None:
+        artifact = ModelArtifact(graph=state_graph(flat, self.model_name),
+                                 params=flat, model_type=self.model_name,
+                                 metadata={"step": step})
+        prev_step = None
+        for n in self.lineage.nodes:
+            if n.startswith(self.model_name + "/step"):
+                s = int(n.rsplit("step", 1)[1])
+                if s < step and (prev_step is None or s > prev_step):
+                    prev_step = s
+        node = self.lineage.add_node(None, name, model_type=self.model_name)
+        if prev_step is not None:
+            # version edge first so the store picks the right delta parent
+            self.lineage.add_version_edge(self._node_name(prev_step), name)
+        self.lineage._attach_artifact(node, artifact)  # atomic manifest commit
+        self.lineage._commit()
+
+    def _start_worker(self) -> None:
+        if self._worker is None or not self._worker.is_alive():
+            self._worker = threading.Thread(target=self._drain, daemon=True)
+            self._worker.start()
+
+    def _drain(self) -> None:
+        while True:
+            try:
+                item = self._queue.get(timeout=0.2)
+            except queue.Empty:
+                return
+            try:
+                self._commit(*item)
+            except BaseException as e:  # surfaced on next save()/wait()
+                self._error = e
+            finally:
+                self._queue.task_done()
+
+    def wait(self) -> None:
+        self._queue.join()
+        self._check_error()
+
+    def _check_error(self) -> None:
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError("async checkpoint save failed") from err
+
+    # -- restore ---------------------------------------------------------------------
+    def restore(self, step: Optional[int] = None, template: Any = None,
+                verify: bool = False):
+        """Load flat state (or a full pytree if ``template`` given)."""
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError("no committed checkpoint found")
+        node = self.lineage.nodes[self._node_name(step)]
+        artifact = node.get_model()
+        if verify:
+            manifest = self.store.get_manifest(node.artifact_ref)
+            for key, e in manifest["params"].items():
+                if e["kind"] == "full":
+                    if tensor_hash(artifact.params[key]) != e["tensor"]:
+                        raise IOError(f"checkpoint corruption detected in {key!r}")
+        flat = artifact.params
+        if template is None:
+            return flat, step
+        return unflatten_state(template, flat), step
+
+    def restore_sharded(self, template: Any, step: Optional[int] = None,
+                        verify: bool = False):
+        """Elastic restore: lay the checkpoint out per ``template``'s shardings.
+
+        ``template`` leaves are jax.ShapeDtypeStruct with ``.sharding`` set for
+        the TARGET mesh — which may differ from the mesh that wrote the
+        checkpoint (scale-up/down after failure)."""
+        state, step = self.restore(step=step, template=template, verify=verify)
+
+        def _place(leaf, tmpl):
+            sharding = getattr(tmpl, "sharding", None)
+            if sharding is not None:
+                return jax.device_put(leaf, sharding)
+            return jax.numpy.asarray(leaf)
+
+        return jax.tree_util.tree_map(_place, state, template), step

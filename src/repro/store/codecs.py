@@ -1,0 +1,139 @@
+"""Lossless codecs for quantized deltas (paper §4: RLE, LZMA, ...).
+
+All codecs share one interface: ``encode(int32 ndarray) -> bytes`` and
+``decode(bytes, n) -> int32 ndarray``. Quantized deltas of similar models are
+dominated by zero runs, so RLE is fast/mediocre and LZMA is slow/strong —
+exactly the paper's tradeoff (Table 4). ``sparse`` is a beyond-paper codec
+(index+value pairs + zlib) that wins when density drops below ~5%.
+"""
+
+from __future__ import annotations
+
+import lzma
+import struct
+import zlib
+from typing import Dict
+
+import numpy as np
+
+
+class Codec:
+    """Codecs are dtype-aware: the quantized delta may arrive as int8 (the
+    fused snapshot kernel narrows when every value fits; §Perf-C) or int32."""
+
+    name = "none"
+
+    def encode(self, arr: np.ndarray) -> bytes:
+        raise NotImplementedError
+
+    def decode(self, data: bytes, n: int, dtype: str = "int32") -> np.ndarray:
+        raise NotImplementedError
+
+
+class RawCodec(Codec):
+    name = "raw"
+
+    def encode(self, arr: np.ndarray) -> bytes:
+        return np.ascontiguousarray(arr).tobytes()
+
+    def decode(self, data: bytes, n: int, dtype: str = "int32") -> np.ndarray:
+        return np.frombuffer(data, dtype=np.dtype(dtype), count=n).copy()
+
+
+class RLECodec(Codec):
+    """Vectorized run-length encoding: header n_runs + values + runs(uint32)."""
+
+    name = "rle"
+
+    def encode(self, arr: np.ndarray) -> bytes:
+        flat = np.ascontiguousarray(arr).ravel()
+        if flat.size == 0:
+            return struct.pack("<I", 0)
+        boundaries = np.flatnonzero(np.diff(flat)) + 1
+        starts = np.concatenate(([0], boundaries))
+        ends = np.concatenate((boundaries, [flat.size]))
+        values = flat[starts]
+        runs = (ends - starts).astype(np.uint32)
+        return struct.pack("<I", values.size) + values.tobytes() + runs.tobytes()
+
+    def decode(self, data: bytes, n: int, dtype: str = "int32") -> np.ndarray:
+        (k,) = struct.unpack("<I", data[:4])
+        if n == 0 or k == 0:
+            return np.zeros(n, dtype=np.dtype(dtype))
+        item = np.dtype(dtype).itemsize
+        values = np.frombuffer(data[4:4 + k * item], dtype=np.dtype(dtype))
+        runs = np.frombuffer(data[4 + k * item:4 + k * item + 4 * k],
+                             dtype=np.uint32)
+        return np.repeat(values, runs.astype(np.int64))
+
+
+class LZMACodec(Codec):
+    """LZMA over raw bytes. preset=1 keeps runtime sane on large models
+    with only a small ratio loss vs the default preset (see bench_compression)."""
+
+    name = "lzma"
+
+    def __init__(self, preset: int = 1) -> None:
+        self.preset = preset
+
+    def encode(self, arr: np.ndarray) -> bytes:
+        return lzma.compress(np.ascontiguousarray(arr).tobytes(),
+                             preset=self.preset)
+
+    def decode(self, data: bytes, n: int, dtype: str = "int32") -> np.ndarray:
+        return np.frombuffer(lzma.decompress(data), dtype=np.dtype(dtype),
+                             count=n).copy()
+
+
+class ZlibCodec(Codec):
+    name = "zlib"
+
+    def __init__(self, level: int = 6) -> None:
+        self.level = level
+
+    def encode(self, arr: np.ndarray) -> bytes:
+        return zlib.compress(np.ascontiguousarray(arr).tobytes(), self.level)
+
+    def decode(self, data: bytes, n: int, dtype: str = "int32") -> np.ndarray:
+        return np.frombuffer(zlib.decompress(data), dtype=np.dtype(dtype),
+                             count=n).copy()
+
+
+class SparseCodec(Codec):
+    """Beyond-paper: store (index-delta varint-ish uint32, value int32) of
+    nonzeros, then zlib. Wins over RLE/LZMA below ~5% density."""
+
+    name = "sparse"
+
+    def encode(self, arr: np.ndarray) -> bytes:
+        flat = np.ascontiguousarray(arr).ravel()
+        idx = np.flatnonzero(flat).astype(np.uint32)
+        vals = flat[idx]
+        idx_delta = np.diff(idx, prepend=np.uint32(0)).astype(np.uint32)
+        payload = struct.pack("<I", idx.size) + idx_delta.tobytes() + vals.tobytes()
+        return zlib.compress(payload, 6)
+
+    def decode(self, data: bytes, n: int, dtype: str = "int32") -> np.ndarray:
+        dt = np.dtype(dtype)
+        payload = zlib.decompress(data)
+        (k,) = struct.unpack("<I", payload[:4])
+        idx_delta = np.frombuffer(payload[4:4 + 4 * k], dtype=np.uint32)
+        vals = np.frombuffer(payload[4 + 4 * k:4 + 4 * k + dt.itemsize * k],
+                             dtype=dt)
+        out = np.zeros(n, dtype=dt)
+        out[np.cumsum(idx_delta.astype(np.int64))] = vals
+        return out
+
+
+CODECS: Dict[str, Codec] = {
+    "raw": RawCodec(),
+    "rle": RLECodec(),
+    "lzma": LZMACodec(),
+    "lzma6": LZMACodec(preset=6),
+    "zlib": ZlibCodec(),
+    "sparse": SparseCodec(),
+}
+
+
+def get_codec(name: str) -> Codec:
+    return CODECS[name]

@@ -1,0 +1,6 @@
+from repro.train.loop import Trainer
+from repro.train.step import (cross_entropy, init_state, make_loss_fn,
+                              make_train_step)
+
+__all__ = ["Trainer", "cross_entropy", "init_state", "make_loss_fn",
+           "make_train_step"]

@@ -1,0 +1,77 @@
+"""Fault-tolerant training loop: MGit-versioned checkpoints, restart, stragglers.
+
+The Trainer wires together the substrates: synthetic pipeline, jitted
+train_step (sharded when a mesh is given), CheckpointManager (every
+checkpoint is an MGit version node; restart resumes from the latest committed
+one, including onto a different mesh), and the straggler monitor.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.data import SyntheticPipeline
+from repro.ft import StepTimer, StragglerPolicy
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+from repro.store.checkpoint import CheckpointManager
+from repro.train.step import init_state, make_train_step
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, *, batch: int = 8, seq: int = 128,
+                 opt_cfg: Optional[adamw.AdamWConfig] = None,
+                 n_microbatches: int = 1, compress_grads: bool = False,
+                 checkpoint_dir: Optional[str] = None,
+                 checkpoint_every: int = 50, mesh: Optional[Any] = None,
+                 seed: int = 0,
+                 on_metrics: Optional[Callable[[int, Dict], None]] = None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.checkpoint_every = checkpoint_every
+        self.on_metrics = on_metrics
+        self.pipeline = SyntheticPipeline(cfg, batch=batch, seq=seq, mesh=mesh,
+                                          seed=seed)
+        self.train_step = jax.jit(make_train_step(
+            cfg, opt_cfg, n_microbatches=n_microbatches,
+            compress_grads=compress_grads), donate_argnums=(0,))
+        self.state = init_state(cfg, seed, compress_grads=compress_grads)
+        self.timer = StepTimer()
+        self.policy = StragglerPolicy()
+        self.ckpt: Optional[CheckpointManager] = None
+        self.start_step = 0
+        if checkpoint_dir is not None:
+            self.ckpt = CheckpointManager(checkpoint_dir,
+                                          model_name=cfg.name)
+            latest = self.ckpt.latest_step()
+            if latest is not None:  # crash restart: resume from last commit
+                self.state, _ = self.ckpt.restore(step=latest,
+                                                  template=self.state)
+                self.start_step = latest
+                self.pipeline.step = latest
+
+    def run(self, n_steps: int) -> Dict[str, list]:
+        history: Dict[str, list] = {"loss": [], "step_time": []}
+        for step in range(self.start_step, self.start_step + n_steps):
+            batch = self.pipeline.host_batch(step)
+            t0 = time.perf_counter()
+            self.state, metrics = self.train_step(self.state, batch)
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            history["loss"].append(loss)
+            history["step_time"].append(dt)
+            event = self.timer.record(step, dt)
+            if event is not None:
+                self.policy.on_event(event)
+            if self.ckpt is not None and (step + 1) % self.checkpoint_every == 0:
+                self.ckpt.save(step + 1, self.state)  # async, MGit-versioned
+            if self.on_metrics is not None:
+                self.on_metrics(step, {"loss": loss, "step_time": dt, **{
+                    k: float(v) for k, v in metrics.items() if k != "loss"}})
+        if self.ckpt is not None:
+            self.ckpt.wait()
+        return history

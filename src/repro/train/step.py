@@ -1,0 +1,98 @@
+"""train_step / loss: next-token LM objective with microbatched grad accumulation.
+
+TrainState is a plain dict (checkpoint-friendly via ``repro.store``):
+  {"params": <model pytree>, "opt": OptState, "step": int32,
+   ["err": error-feedback pytree when gradient compression is on]}
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import compression
+from repro.models.config import ModelConfig
+from repro.models.model import forward, init_params
+from repro.optim import adamw
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean next-token NLL. logits: (B, S, V) (vocab may be model-sharded)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    label_logit = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - label_logit)
+
+
+def make_loss_fn(cfg: ModelConfig):
+    def loss_fn(params, batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        logits = forward(cfg, params, batch)
+        tokens = batch["tokens"]
+        return cross_entropy(logits[:, :-1], tokens[:, 1:])
+    return loss_fn
+
+
+def init_state(cfg: ModelConfig, seed: int = 0,
+               compress_grads: bool = False) -> Dict[str, Any]:
+    params = init_params(cfg, seed)
+    state = {"params": params, "opt": adamw.init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    if compress_grads:
+        state["err"] = compression.init_error_state(params)
+    return state
+
+
+def _split_microbatches(batch: Dict[str, jnp.ndarray], n: int):
+    def reshape(x):
+        return x.reshape((n, x.shape[0] // n) + x.shape[1:])
+    return jax.tree_util.tree_map(reshape, batch)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: Optional[adamw.AdamWConfig] = None,
+                    n_microbatches: int = 1, compress_grads: bool = False):
+    """Build the jittable train_step(state, batch) -> (state, metrics).
+
+    Microbatching scans over ``n_microbatches`` slices of the global batch and
+    accumulates fp32 gradients — peak activation memory scales with the
+    microbatch, not the global batch. Gradient compression (int8 + error
+    feedback) models the cross-pod DCN reduction (dist/compression.py).
+    """
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    loss_fn = make_loss_fn(cfg)
+
+    def train_step(state: Dict[str, Any], batch: Dict[str, jnp.ndarray]):
+        params = state["params"]
+
+        if n_microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            mbs = _split_microbatches(batch, n_microbatches)
+            zero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(acc, mb):
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                acc = jax.tree_util.tree_map(
+                    lambda a, x: a + x.astype(jnp.float32), acc, g)
+                return acc, l
+
+            grads, losses = jax.lax.scan(body, zero, mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / n_microbatches, grads)
+            loss = jnp.mean(losses)
+
+        new_state = dict(state)
+        if compress_grads:
+            grads, new_err = compression.compress_gradients(grads, state["err"])
+            new_state["err"] = new_err
+
+        new_params, new_opt, metrics = adamw.update(opt_cfg, grads,
+                                                    state["opt"], params)
+        new_state.update(params=new_params, opt=new_opt,
+                         step=state["step"] + 1)
+        metrics["loss"] = loss
+        return new_state, metrics
+
+    return train_step

@@ -1,0 +1,58 @@
+"""Shared test fixtures: toy model artifacts and derivation operators."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import LayerGraph, LayerNode, ModelArtifact
+
+
+def make_chain_model(seed=0, n_layers=4, d=16, head_dim=4, prefix="L",
+                     model_type="toy") -> ModelArtifact:
+    rng = np.random.default_rng(seed)
+    layers, params = [], {}
+    for i in range(n_layers):
+        layers.append(LayerNode(f"{prefix}{i}", "linear",
+                                params={"w": ((d, d), "float32"),
+                                        "b": ((d,), "float32")}))
+        params[f"{prefix}{i}/w"] = rng.normal(size=(d, d)).astype(np.float32)
+        params[f"{prefix}{i}/b"] = rng.normal(size=(d,)).astype(np.float32)
+    layers.append(LayerNode("head", "linear",
+                            params={"w": ((d, head_dim), "float32")}))
+    params["head/w"] = rng.normal(size=(d, head_dim)).astype(np.float32)
+    return ModelArtifact(LayerGraph.chain(layers), params, model_type=model_type)
+
+
+def finetune_like(parent: ModelArtifact, seed=1, scale=5e-5,
+                  density=0.3) -> ModelArtifact:
+    """Sparse, tiny parameter perturbation — the adaptation regime."""
+    rng = np.random.default_rng(seed)
+    return parent.map_params(
+        lambda k, v: (v + (rng.normal(scale=scale, size=v.shape) *
+                           (rng.random(v.shape) < density)).astype(v.dtype)))
+
+
+def reinit_head(parent: ModelArtifact, seed=2) -> ModelArtifact:
+    rng = np.random.default_rng(seed)
+    new_head = rng.normal(size=parent.params["head/w"].shape).astype(np.float32)
+    return parent.replace_params({"head/w": new_head})
+
+
+def prune_like(parent: ModelArtifact, sparsity=0.5) -> ModelArtifact:
+    """Magnitude pruning — the edge-specialization regime."""
+    def prune(k, v):
+        flat = np.abs(v).ravel()
+        kth = np.quantile(flat, sparsity)
+        return np.where(np.abs(v) < kth, 0.0, v).astype(v.dtype)
+    return parent.map_params(prune)
+
+
+def l2_test(model: ModelArtifact) -> float:
+    """Cheap deterministic 'accuracy' stand-in: mean output of a probe."""
+    x = np.ones((2, model.params["L0/w"].shape[0]), np.float32)
+    for name in model.graph.topo_order():
+        w = model.params.get(f"{name}/w")
+        if w is None:
+            continue
+        x = np.tanh(x @ w)
+    return float(np.mean(x) * 100)

@@ -1,0 +1,104 @@
+"""CheckpointManager: versioned saves, restart, verification, elastic reshard."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.store.checkpoint import (CheckpointManager, flatten_state,
+                                    unflatten_state)
+
+
+def _state(step=0, scale=1.0):
+    return {
+        "params": {"w": jnp.full((64, 64), scale), "b": jnp.zeros(64)},
+        "opt": {"mu": jnp.zeros((64, 64))},
+        "step": jnp.asarray(step, jnp.int32),
+    }
+
+
+def test_flatten_unflatten_roundtrip():
+    s = _state()
+    flat = flatten_state(s)
+    assert "params/w" in flat and "opt/mu" in flat
+    s2 = unflatten_state(s, flat)
+    assert jnp.allclose(s2["params"]["w"], s["params"]["w"])
+    assert s2["step"] == s["step"]
+
+
+def test_save_restore_latest(tmp_path):
+    cm = CheckpointManager(str(tmp_path), model_name="m")
+    cm.save(10, _state(10, 1.0), blocking=True)
+    cm.save(20, _state(20, 1.001), blocking=True)
+    restored, step = cm.restore(template=_state())
+    assert step == 20
+    assert float(restored["params"]["w"][0, 0]) == pytest.approx(1.001, abs=1e-3)
+
+
+def test_async_save_and_wait(tmp_path):
+    cm = CheckpointManager(str(tmp_path), model_name="m", async_save=True)
+    for s in range(3):
+        cm.save(s, _state(s, 1.0 + s * 1e-4))
+    cm.wait()
+    assert cm.latest_step() == 2
+
+
+def test_restore_specific_step(tmp_path):
+    cm = CheckpointManager(str(tmp_path), model_name="m")
+    cm.save(1, _state(1, 1.0), blocking=True)
+    cm.save(2, _state(2, 2.0), blocking=True)
+    restored, step = cm.restore(step=1, template=_state())
+    assert step == 1 and float(restored["params"]["w"][0, 0]) == pytest.approx(1.0, abs=1e-3)
+
+
+def test_delta_compression_across_steps(tmp_path):
+    cm = CheckpointManager(str(tmp_path), model_name="m")
+    s = _state(0, 1.0)
+    cm.save(0, s, blocking=True)
+    for i in range(1, 4):  # small optimizer excursions
+        s = jax.tree_util.tree_map(lambda x: x + 1e-5, s)
+        cm.save(i, s, blocking=True)
+    assert cm.store.compression_ratio() > 2.0
+
+
+def test_verification_detects_corruption(tmp_path):
+    cm = CheckpointManager(str(tmp_path), model_name="m", delta_enabled=False)
+    cm.save(0, _state(0), blocking=True)
+    # flip bytes in the largest object (the weight tensor)
+    objdir = os.path.join(str(tmp_path), "objects")
+    victim = max(os.listdir(objdir),
+                 key=lambda f: os.path.getsize(os.path.join(objdir, f)))
+    path = os.path.join(objdir, victim)
+    data = bytearray(open(path, "rb").read())
+    data[-100] ^= 0xFF
+    open(path, "wb").write(bytes(data))
+    cm2 = CheckpointManager(str(tmp_path), model_name="m")
+    with pytest.raises(IOError):
+        cm2.restore(template=_state(), verify=True)
+
+
+def test_crash_restart_resumes_from_committed(tmp_path):
+    cm = CheckpointManager(str(tmp_path), model_name="m")
+    cm.save(5, _state(5), blocking=True)
+    # simulate crash: a fresh manager over the same dir
+    cm2 = CheckpointManager(str(tmp_path), model_name="m")
+    assert cm2.latest_step() == 5
+    restored, step = cm2.restore(template=_state())
+    assert step == 5
+
+
+def test_elastic_restore_sharded(tmp_path):
+    """Checkpoint written unsharded restores onto explicit device placements
+    (the mesh-reshape path used after node loss)."""
+    cm = CheckpointManager(str(tmp_path), model_name="m")
+    cm.save(0, _state(0, 3.0), blocking=True)
+    dev = jax.devices()[0]
+    template = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype,
+                                       sharding=jax.sharding.SingleDeviceSharding(dev)),
+        _state())
+    restored, step = cm.restore_sharded(template)
+    assert float(restored["params"]["w"][0, 0]) == 3.0
+    assert restored["params"]["w"].sharding.device_set == {dev}

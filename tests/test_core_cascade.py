@@ -1,0 +1,127 @@
+"""run_update_cascade (Algorithm 2), incl. MTL groups and creation functions."""
+
+import numpy as np
+import pytest
+
+from repro.core import (CreationFunction, LineageGraph, ModelArtifact,
+                        next_version_name, register_creation_type,
+                        run_update_cascade)
+
+from helpers import finetune_like, make_chain_model, reinit_head
+
+
+@register_creation_type("test-finetune")
+class FinetuneCr(CreationFunction):
+    """Deterministic 'finetune': parent params + seed-derived perturbation."""
+
+    def __call__(self, parents):
+        parent = parents[0].get_model()
+        return finetune_like(parent, seed=self.config["seed"], density=1.0,
+                             scale=self.config.get("scale", 1e-4))
+
+
+@register_creation_type("test-mtl")
+class MTLCr(CreationFunction):
+    def __call__(self, parents):
+        return finetune_like(parents[0].get_model(), seed=self.config["seed"])
+
+    def run_group(self, nodes):
+        # shared trunk: all group members share the parent's trunk params and
+        # get member-specific heads
+        out = []
+        for node in nodes:
+            m = finetune_like(node.get_parents()[0].get_model(),
+                              seed=node.creation_fn.config["seed"])
+            shared = node.get_parents()[0].get_model()
+            m = m.replace_params({k: v for k, v in shared.params.items()
+                                  if not k.startswith("head")})
+            out.append(m)
+        return out
+
+
+def _build(tmp_path, n_children=3):
+    g = LineageGraph(path=str(tmp_path))
+    root = make_chain_model(seed=0)
+    g.add_node(root, "mlm")
+    for i in range(n_children):
+        cr = FinetuneCr(seed=100 + i)
+        child = cr([g.nodes["mlm"]])
+        g.add_node(child, f"task{i}", cr=cr)
+        g.add_edge("mlm", f"task{i}")
+    return g
+
+
+def test_next_version_name():
+    assert next_version_name("m") == "m@v2"
+    assert next_version_name("m@v2") == "m@v3"
+    assert next_version_name("m@v9") == "m@v10"
+
+
+def test_cascade_creates_new_versions(tmp_path):
+    g = _build(tmp_path)
+    new_root = finetune_like(g.get_model("mlm"), seed=999, scale=1e-3)
+    g.add_node(new_root, "mlm@v2")
+    created = run_update_cascade(g, "mlm", "mlm@v2")
+    assert sorted(created) == ["task0@v2", "task1@v2", "task2@v2"]
+    for i in range(3):
+        node = g.nodes[f"task{i}@v2"]
+        assert node.parents == ["mlm@v2"]                 # provenance rewired
+        assert g.nodes[f"task{i}"].version_children == [f"task{i}@v2"]
+        # the new version was materialized via the creation function
+        m_new = node.get_model()
+        m_expected = FinetuneCr(seed=100 + i)([g.nodes["mlm@v2"]])
+        np.testing.assert_allclose(m_new.params["L0/w"],
+                                   m_expected.params["L0/w"], atol=1e-6)
+
+
+def test_cascade_never_overwrites(tmp_path):
+    g = _build(tmp_path)
+    before = {k: v.copy() for k, v in g.get_model("task0").params.items()}
+    g.add_node(finetune_like(g.get_model("mlm"), seed=5), "mlm@v2")
+    run_update_cascade(g, "mlm", "mlm@v2")
+    after = g.get_model("task0").params
+    for k in before:
+        np.testing.assert_array_equal(before[k], after[k])
+
+
+def test_cascade_skip_fn(tmp_path):
+    g = _build(tmp_path)
+    g.add_node(finetune_like(g.get_model("mlm"), seed=5), "mlm@v2")
+    created = run_update_cascade(g, "mlm", "mlm@v2",
+                                 skip_fn=lambda n: n.name == "task1")
+    assert "task1@v2" not in created
+    assert "task0@v2" in created
+
+
+def test_cascade_multi_level(tmp_path):
+    g = _build(tmp_path, n_children=1)
+    # grandchild under task0
+    cr = FinetuneCr(seed=500)
+    gc = cr([g.nodes["task0"]])
+    g.add_node(gc, "distilled", cr=cr)
+    g.add_edge("task0", "distilled")
+    g.add_node(finetune_like(g.get_model("mlm"), seed=5), "mlm@v2")
+    created = run_update_cascade(g, "mlm", "mlm@v2")
+    assert "task0@v2" in created and "distilled@v2" in created
+    assert g.nodes["distilled@v2"].parents == ["task0@v2"]
+
+
+def test_cascade_mtl_group(tmp_path):
+    g = LineageGraph(path=str(tmp_path))
+    root = make_chain_model(seed=0)
+    g.add_node(root, "mlm")
+    for i in range(2):
+        cr = MTLCr(seed=100 + i)
+        cr.mtl_group = "glue"
+        child = cr([g.nodes["mlm"]])
+        g.add_node(child, f"mtl{i}", cr=cr)
+        g.add_edge("mlm", f"mtl{i}")
+    g.add_node(finetune_like(root, seed=9), "mlm@v2")
+    created = run_update_cascade(g, "mlm", "mlm@v2")
+    assert sorted(created) == ["mtl0@v2", "mtl1@v2"]
+    # group members share trunk parameters exactly (MTL invariant)
+    m0 = g.get_model("mtl0@v2")
+    m1 = g.get_model("mtl1@v2")
+    for k in m0.params:
+        if not k.startswith("head"):
+            np.testing.assert_array_equal(m0.params[k], m1.params[k])

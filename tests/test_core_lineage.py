@@ -1,0 +1,116 @@
+"""Lineage graph API (paper Tables 1-2): nodes, edges, traversals, tests."""
+
+import os
+
+import pytest
+
+from repro.core import LineageGraph, bfs, bisect, dfs, version_chain
+from repro.core.lineage import RegisteredTest
+
+from helpers import finetune_like, l2_test, make_chain_model
+
+
+@pytest.fixture
+def graph(tmp_path):
+    g = LineageGraph(path=str(tmp_path))
+    root = make_chain_model(seed=0)
+    g.add_node(root, "root")
+    for i in range(3):
+        child = finetune_like(root, seed=10 + i)
+        g.add_node(child, f"child{i}")
+        g.add_edge("root", f"child{i}")
+    return g
+
+
+def test_add_and_query(graph):
+    assert len(graph) == 4
+    assert [n.name for n in graph.roots()] == ["root"]
+    assert sorted(graph.nodes["root"].children) == ["child0", "child1", "child2"]
+    assert graph.nodes["child0"].parents == ["root"]
+
+
+def test_persistence_roundtrip(graph, tmp_path):
+    g2 = LineageGraph(path=str(tmp_path))
+    assert set(g2.nodes) == set(graph.nodes)
+    assert g2.nodes["child1"].parents == ["root"]
+
+
+def test_version_edges_and_chain(graph):
+    v2 = finetune_like(graph.get_model("child0"), seed=99)
+    graph.add_node(v2, "child0@v2")
+    graph.add_version_edge("child0", "child0@v2")
+    chain = [n.name for n in version_chain(graph, "child0@v2")]
+    assert chain == ["child0", "child0@v2"]
+    assert graph.get_next_version("child0").name == "child0@v2"
+
+
+def test_version_edge_type_mismatch(graph):
+    other = make_chain_model(seed=5, model_type="other")
+    graph.add_node(other, "other")
+    with pytest.raises(ValueError):
+        graph.add_version_edge("root", "other")
+
+
+def test_remove_node_subtree(graph):
+    gc = finetune_like(graph.get_model("child0"), seed=42)
+    graph.add_node(gc, "gc")
+    graph.add_edge("child0", "gc")
+    graph.remove_node("child0")
+    assert "child0" not in graph
+    assert "gc" not in graph  # subtree removed
+    assert "child1" in graph
+
+
+def test_bfs_dfs_orders(graph):
+    names_bfs = [n.name for n in bfs(graph)]
+    names_dfs = [n.name for n in dfs(graph)]
+    assert names_bfs[0] == "root" and names_dfs[0] == "root"
+    assert set(names_bfs) == set(names_dfs) == set(graph.nodes)
+
+
+def test_skip_and_terminate(graph):
+    out = [n.name for n in bfs(graph, skip_fn=lambda n: n.name == "child1")]
+    assert "child1" not in out and "child2" in out
+    out = [n.name for n in bfs(graph, terminate_fn=lambda n: n.name.startswith("child"))]
+    assert out == ["root"]
+
+
+def test_run_tests_with_regex(graph):
+    graph.register_test_function(l2_test, "probe/l2", mt="toy")
+    graph.register_test_function(lambda m: 1.0, "other", mt="toy")
+    results = graph.run_tests(bfs(graph), re_pattern="probe.*")
+    assert set(results) == set(graph.nodes)
+    assert all(set(v) == {"probe/l2"} for v in results.values())
+    graph.deregister_test_function("probe/l2", mt="toy")
+    assert all(t.name != "probe/l2" for t in graph.tests)
+
+
+def test_run_function(graph):
+    out = graph.run_function(bfs(graph), lambda m: m.nbytes())
+    assert set(out) == set(graph.nodes)
+    assert all(v > 0 for v in out.values())
+
+
+def test_bisect_finds_first_failing(graph):
+    # version chain v1..v8; versions >= 5 "fail"
+    prev = "child0"
+    for v in range(2, 9):
+        m = finetune_like(graph.get_model(prev), seed=v)
+        m.metadata["broken"] = v >= 5
+        name = f"child0@v{v}"
+        graph.add_node(m, name)
+        graph.add_version_edge(prev, name)
+        prev = name
+    calls = []
+
+    def failing(node):
+        calls.append(node.name)
+        return bool(node.get_model().metadata.get("broken"))
+
+    first = bisect(graph, "child0", failing)
+    assert first.name == "child0@v5"
+    assert len(calls) < 8  # fewer probes than linear scan
+
+
+def test_bisect_no_failure(graph):
+    assert bisect(graph, "child0", lambda n: False) is None

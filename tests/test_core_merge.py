@@ -1,0 +1,98 @@
+"""merge primitive (§5, Figure 2 decision tree)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (CONFLICT, NO_CONFLICT, POSSIBLE_CONFLICT, LayerGraph,
+                        LayerNode, LineageGraph, ModelArtifact, merge,
+                        merge_artifacts)
+from repro.core.lineage import RegisteredTest
+
+from helpers import l2_test, make_chain_model
+
+
+def _branch_model(seed=0, d=8):
+    """Two parallel branches (b1, b2) joining at a head — enables NO_CONFLICT."""
+    g = LayerGraph()
+    for name in ("stem", "b1", "b2", "head"):
+        g.add_node(LayerNode(name, "linear", params={"w": ((d, d), "float32")}))
+    g.add_edge("stem", "b1")
+    g.add_edge("stem", "b2")
+    g.add_edge("b1", "head")
+    g.add_edge("b2", "head")
+    rng = np.random.default_rng(seed)
+    params = {f"{n}/w": rng.normal(size=(d, d)).astype(np.float32)
+              for n in g.nodes}
+    return ModelArtifact(g, params, model_type="toy")
+
+
+def _edit(m, layer, delta=0.1):
+    return m.replace_params({f"{layer}/w": m.params[f"{layer}/w"] + delta})
+
+
+def test_conflict_same_layer():
+    m = _branch_model()
+    r = merge_artifacts(m, _edit(m, "b1", 0.1), _edit(m, "b1", -0.1))
+    assert r.status == CONFLICT
+    assert r.conflicting_layers == ["b1"]
+    assert r.merged is None
+
+
+def test_possible_conflict_dependent_layers():
+    m = make_chain_model(seed=0)  # chain: everything reaches the head
+    r = merge_artifacts(m, _edit(m, "L0"), _edit(m, "L2"))
+    assert r.status == POSSIBLE_CONFLICT
+    assert r.merged is not None
+    # both edits present in the merged model
+    np.testing.assert_allclose(r.merged.params["L0/w"],
+                               m.params["L0/w"] + 0.1, rtol=1e-6)
+    np.testing.assert_allclose(r.merged.params["L2/w"],
+                               m.params["L2/w"] + 0.1, rtol=1e-6)
+
+
+def test_no_conflict_parallel_branches():
+    m = _branch_model()
+    r = merge_artifacts(m, _edit(m, "b1"), _edit(m, "b2"))
+    # b1 and b2 are siblings but share the downstream head consumer ->
+    # paper's tree says dependent (possible conflict), not auto-merge
+    assert r.status == POSSIBLE_CONFLICT
+
+
+def test_no_conflict_truly_independent():
+    """Two disjoint output branches with no common consumer."""
+    g = LayerGraph()
+    for name in ("stem", "head_a", "head_b"):
+        g.add_node(LayerNode(name, "linear", params={"w": ((8, 8), "float32")}))
+    g.add_edge("stem", "head_a")
+    g.add_edge("stem", "head_b")
+    rng = np.random.default_rng(0)
+    params = {f"{n}/w": rng.normal(size=(8, 8)).astype(np.float32) for n in g.nodes}
+    m = ModelArtifact(g, params, model_type="toy")
+    r = merge_artifacts(m, _edit(m, "head_a"), _edit(m, "head_b"))
+    assert r.status == NO_CONFLICT
+    assert r.merged is not None
+
+
+def test_dependent_changes_resolved_by_tests():
+    m = make_chain_model(seed=0)
+    tests = [RegisteredTest(name="l2", fn=l2_test, model_type="toy")]
+    r = merge_artifacts(m, _edit(m, "L0", 1e-6), _edit(m, "L2", 1e-6),
+                        tests=tests, test_threshold=-1e9)
+    assert r.status == NO_CONFLICT  # tests ran and passed
+    assert "l2" in r.test_results
+
+
+def test_graph_level_merge_inserts_node(tmp_path):
+    g = LineageGraph(path=str(tmp_path))
+    base = _branch_model()
+    g.add_node(base, "base")
+    m1, m2 = _edit(base, "head_a" if "head_a" in base.graph.nodes else "b1"), \
+        _edit(base, "b2")
+    g.add_node(m1, "user1")
+    g.add_edge("base", "user1")
+    g.add_node(m2, "user2")
+    g.add_edge("base", "user2")
+    r = merge(g, "user1", "user2")
+    assert r.status in (NO_CONFLICT, POSSIBLE_CONFLICT)
+    assert "merge(user1,user2)" in g
+    assert set(g.nodes["merge(user1,user2)"].parents) == {"user1", "user2"}

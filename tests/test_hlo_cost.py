@@ -1,0 +1,71 @@
+"""HLO cost model (launch/hlo_cost.py) vs XLA cost_analysis ground truth."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_cost import analyze
+
+
+def _compile(f, *specs):
+    return jax.jit(f).lower(*specs).compile()
+
+
+def test_matches_xla_on_loop_free_matmul():
+    f = lambda a, b: jnp.tanh(a @ b)
+    c = _compile(f, jax.ShapeDtypeStruct((128, 256), np.float32),
+                 jax.ShapeDtypeStruct((256, 64), np.float32))
+    mine = analyze(c.as_text())
+    xla = c.cost_analysis()
+    assert mine["flops"] == pytest.approx(xla["flops"], rel=0.02)
+    assert mine["bytes"] == pytest.approx(xla["bytes accessed"], rel=0.05)
+
+
+def test_scan_trip_count_multiplies():
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        return jax.lax.scan(body, x, None, length=7)[0]
+
+    single = _compile(lambda x, w: jnp.tanh(x @ w),
+                      jax.ShapeDtypeStruct((64, 64), np.float32),
+                      jax.ShapeDtypeStruct((64, 64), np.float32))
+    looped = _compile(f, jax.ShapeDtypeStruct((64, 64), np.float32),
+                      jax.ShapeDtypeStruct((64, 64), np.float32))
+    f1 = analyze(single.as_text())["flops"]
+    f7 = analyze(looped.as_text())["flops"]
+    assert f7 == pytest.approx(7 * f1, rel=0.05)
+
+
+def test_nested_scan():
+    def f(x, w):
+        def outer(c, _):
+            def inner(ci, _):
+                return jnp.tanh(ci @ w), None
+            return jax.lax.scan(inner, c, None, length=3)[0], None
+        return jax.lax.scan(outer, x, None, length=5)[0]
+
+    c = _compile(f, jax.ShapeDtypeStruct((64, 64), np.float32),
+                 jax.ShapeDtypeStruct((64, 64), np.float32))
+    mine = analyze(c.as_text())
+    # 15 matmuls of 2*64^3
+    assert mine["flops"] == pytest.approx(15 * 2 * 64**3, rel=0.1)
+
+
+def test_no_unknown_ops_on_model_program():
+    from repro.models.config import ModelConfig
+    from repro.train.step import init_state, make_train_step
+    from repro.data import SyntheticPipeline
+    cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+                      n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=64,
+                      head_dim=16, dtype="float32", attn_chunk=16,
+                      remat="dots")
+    state = jax.eval_shape(lambda: init_state(cfg, 0))
+    batch = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+        SyntheticPipeline(cfg, batch=4, seq=16).host_batch(0))
+    c = jax.jit(make_train_step(cfg)).lower(state, batch).compile()
+    res = analyze(c.as_text())
+    assert res["flops"] > 0 and res["bytes"] > 0
+    assert not res["unknown_ops"], res["unknown_ops"]

@@ -1,0 +1,107 @@
+"""Hypothesis property tests on system invariants (diff/traversal/storage)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (LayerGraph, LayerNode, LineageGraph, ModelArtifact,
+                        all_parents_first, module_diff)
+
+from helpers import finetune_like, make_chain_model
+
+
+# -- random DAG artifacts ----------------------------------------------------
+
+@st.composite
+def dag_artifacts(draw):
+    n = draw(st.integers(2, 8))
+    seed = draw(st.integers(0, 1000))
+    rng = np.random.default_rng(seed)
+    g = LayerGraph()
+    params = {}
+    for i in range(n):
+        d = draw(st.sampled_from([4, 8]))
+        g.add_node(LayerNode(f"n{i}", draw(st.sampled_from(["linear", "conv"])),
+                             params={"w": ((d, d), "float32")}))
+        params[f"n{i}/w"] = rng.normal(size=(d, d)).astype(np.float32)
+    for j in range(1, n):  # random DAG: each node gets >=1 earlier parent
+        for i in draw(st.sets(st.integers(0, j - 1), min_size=1, max_size=2)):
+            g.add_edge(f"n{i}", f"n{j}")
+    return ModelArtifact(g, params, model_type="prop")
+
+
+@given(dag_artifacts())
+@settings(max_examples=30, deadline=None)
+def test_diff_self_is_identical(a):
+    d = module_diff(a, a, mode="contextual")
+    assert d.identical and d.divergence == 0.0
+
+
+@given(dag_artifacts(), dag_artifacts())
+@settings(max_examples=30, deadline=None)
+def test_diff_partitions_nodes(a, b):
+    """matched ∪ deleted = A's nodes; matched ∪ added = B's nodes (disjoint)."""
+    d = module_diff(a, b, mode="structural")
+    a_matched = {x for x, _ in d.matched_nodes}
+    b_matched = {y for _, y in d.matched_nodes}
+    assert a_matched | set(d.del_nodes) == set(a.graph.nodes)
+    assert a_matched & set(d.del_nodes) == set()
+    assert b_matched | set(d.add_nodes) == set(b.graph.nodes)
+    assert b_matched & set(d.add_nodes) == set()
+    assert 0.0 <= d.divergence <= 1.0
+
+
+@given(dag_artifacts(), dag_artifacts())
+@settings(max_examples=20, deadline=None)
+def test_diff_matching_is_one_to_one_and_order_preserving(a, b):
+    d = module_diff(a, b, mode="structural")
+    xs = [x for x, _ in d.matched_nodes]
+    ys = [y for _, y in d.matched_nodes]
+    assert len(set(xs)) == len(xs) and len(set(ys)) == len(ys)
+    # kept matches are increasing in both topological orders (Algorithm 3's
+    # inverse-match filter)
+    ta = {n: i for i, n in enumerate(a.graph.topo_order())}
+    tb = {n: i for i, n in enumerate(b.graph.topo_order())}
+    pairs = sorted(d.matched_nodes, key=lambda m: ta[m[0]])
+    assert all(tb[pairs[i][1]] < tb[pairs[i + 1][1]]
+               for i in range(len(pairs) - 1))
+
+
+@given(st.integers(0, 500), st.integers(2, 6))
+@settings(max_examples=20, deadline=None)
+def test_all_parents_first_invariant(seed, n_children):
+    g = LineageGraph()
+    root = make_chain_model(seed=seed)
+    g.add_node(root, "root")
+    rng = np.random.default_rng(seed)
+    names = ["root"]
+    for i in range(n_children):
+        parents = rng.choice(names, size=min(2, len(names)), replace=False)
+        name = f"c{i}"
+        g.add_node(finetune_like(root, seed=seed + i), name)
+        for p in parents:
+            g.add_edge(str(p), name)
+        names.append(name)
+    seen = set()
+    for node in all_parents_first(g):
+        assert all(p in seen for p in node.parents)
+        seen.add(node.name)
+    assert seen == set(g.nodes)
+
+
+@given(st.floats(1e-6, 1e-3), st.integers(1, 4))
+@settings(max_examples=10, deadline=None)
+def test_delta_chain_error_grows_linearly_at_most(scale, depth):
+    """Loading through a depth-k delta chain accumulates <= k quant steps."""
+    from repro.store import ArtifactStore
+    store = ArtifactStore(root=None, codec="zlib", t_thr=float("inf"))
+    cur = make_chain_model(seed=0, d=32)
+    ref = store.commit_artifact("v0", cur)
+    originals = [cur]
+    for k in range(depth):
+        cur = finetune_like(cur, seed=k + 1, scale=scale, density=0.5)
+        originals.append(cur)
+        ref = store.commit_artifact(f"v{k + 1}", cur, parent_ref=ref)
+    loaded = store.load_artifact(ref)
+    bound = (depth + 1) * 2 * np.log1p(1e-4) + 1e-6
+    for key in cur.params:
+        assert np.max(np.abs(loaded.params[key] - cur.params[key])) <= bound
