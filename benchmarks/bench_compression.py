@@ -89,6 +89,74 @@ def _mgit_run(pool, gold, codec: str, delta: bool, tmp=None):
             "s_per_model": dt / len(pool)}
 
 
+def bench_chain_reconstruction(depth: int = 8, d: int = 256,
+                               repeats: int = 20) -> Dict[str, float]:
+    """Plan-based lazy engine vs the eager recursive loader on a deep chain.
+
+    Builds a ``depth``-long delta chain, then repeatedly reconstructs the
+    chain tip both ways:
+      * ``eager``: ``load_artifact_recursive`` — materializes every FULL
+        ancestor artifact per load (the pre-plan reference path);
+      * ``lazy``: per-parameter plan execution through the byte-budget tensor
+        cache (``load_artifact`` + param access).
+    Also reports single-parameter access cost: bytes materialized to produce
+    ONE tensor from the chain tip, cold, vs the full-model bytes the eager
+    path forces.
+    """
+    import tempfile
+
+    from benchmarks.pools import base_model, finetune
+
+    with tempfile.TemporaryDirectory() as tmp:
+        store = ArtifactStore(root=tmp, codec="lzma", t_thr=float("inf"),
+                              max_chain_depth=depth)
+        model = base_model(seed=0, d=d)
+        refs = [store.commit_artifact("v0", model)]
+        for v in range(1, depth + 1):
+            model = finetune(model, seed=v)
+            refs.append(store.commit_artifact(f"v{v}", model,
+                                              parent_ref=refs[-1]))
+        tip = refs[-1]
+        model_bytes = store.load_artifact(tip).nbytes()
+
+        # cold single-param access through the plan engine
+        store.cache.clear()
+        store.reset_io_stats()
+        art = store.load_artifact(tip)
+        key = next(iter(art.params))
+        art.params[key]
+        single_param_bytes = store.io_stats["bytes_materialized"]
+
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            eager = store.load_artifact_recursive(tip)
+            for k in eager.params:
+                np.asarray(eager.params[k])
+        t_eager = time.perf_counter() - t0
+
+        store.cache.clear()
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            lazy = store.load_artifact(tip)
+            for k in lazy.params:
+                np.asarray(lazy.params[k])
+        t_lazy = time.perf_counter() - t0
+
+    return {
+        "depth": depth,
+        "repeats": repeats,
+        "eager_s": t_eager,
+        "lazy_s": t_lazy,
+        "speedup": t_eager / max(t_lazy, 1e-9),
+        "model_bytes": model_bytes,
+        # peak-materialization comparison for ONE parameter at the chain tip:
+        # the plan engine touches O(tensor x depth); the recursive loader
+        # forces O(model x depth)
+        "single_param_bytes": single_param_bytes,
+        "eager_chain_bytes": model_bytes * (depth + 1),
+    }
+
+
 def run(graphs: List[str] = ("G1", "G2", "G3", "G4", "G5")) -> List[Dict]:
     rows = []
     for gname in graphs:
@@ -117,7 +185,16 @@ def main():
     for r in rows:
         print(f"{r['graph']:5} {r['technique']:24} {r['ratio']:7.2f} "
               f"{r['acc_max']:9.4f} {r['acc_avg']:9.4f} {r['s_per_model']:8.2f}")
-    return rows
+    chain = bench_chain_reconstruction()
+    print(f"\nchain reconstruction (depth={chain['depth']}, "
+          f"x{chain['repeats']} repeats):")
+    print(f"  eager recursive: {chain['eager_s']:.3f}s   "
+          f"lazy plan engine: {chain['lazy_s']:.3f}s   "
+          f"speedup: {chain['speedup']:.1f}x")
+    print(f"  single-param cold access: {chain['single_param_bytes']:,} bytes "
+          f"materialized (tensor x chain) vs {chain['eager_chain_bytes']:,} "
+          f"(model x chain) on the eager path")
+    return rows + [{"technique": "chain_reconstruction", **chain}]
 
 
 if __name__ == "__main__":

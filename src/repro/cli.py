@@ -10,7 +10,10 @@ Commands (analogous to git's CLI, per the paper):
     add-version-edge <x> <y>    versioning edge
     remove-node <x>             remove node + subtree
     test <node|--all> [--re]    run registered tests via a traversal
-    stats                       storage statistics (ratio, dedup, objects)
+    param <node> <key>          materialize ONE parameter (lazy checkout):
+                                prints its reconstruction plan + summary stats
+    stats                       storage statistics (ratio, dedup, objects,
+                                packfiles, tensor cache)
     gc                          collect unreferenced objects
 """
 
@@ -19,6 +22,8 @@ from __future__ import annotations
 import argparse
 import json
 import sys
+
+import numpy as np
 
 from repro.core import LineageGraph, bfs, module_diff
 from repro.store import ArtifactStore
@@ -53,6 +58,9 @@ def main(argv=None) -> int:
     p = sub.add_parser("test")
     p.add_argument("node", nargs="?", default=None)
     p.add_argument("--re", dest="pattern", default=None)
+    p = sub.add_parser("param")
+    p.add_argument("node")
+    p.add_argument("key")
     sub.add_parser("stats")
     sub.add_parser("gc")
 
@@ -98,6 +106,29 @@ def main(argv=None) -> int:
         results = g.run_tests(it, re_pattern=args.pattern)
         print(json.dumps(results, indent=1) if results else
               "(no registered tests matched — register via the Python API)")
+    elif args.cmd == "param":
+        # Lazy single-parameter checkout: resolves the delta chain for ONE
+        # tensor and materializes only that chain — never the full model.
+        node = g.nodes[args.node]
+        if node.artifact_ref is None or g.store is None:
+            print(f"node {args.node!r} has no stored artifact")
+            return 1
+        try:
+            plan = g.store.resolve_chain(node.artifact_ref, args.key)
+        except KeyError:
+            keys = sorted(g.store.get_manifest(node.artifact_ref)["params"])
+            print(f"no param {args.key!r} in {args.node!r}; available: "
+                  + ", ".join(keys[:8]) + (" ..." if len(keys) > 8 else ""))
+            return 1
+        value = g.store.materialize_param(node.artifact_ref, args.key,
+                                          plan=plan)
+        print(json.dumps({
+            "node": args.node, "key": args.key,
+            "shape": list(value.shape), "dtype": str(value.dtype),
+            "l2_norm": float(np.linalg.norm(np.asarray(value, np.float64))),
+            "plan": {"base": plan.base_kind, "chain_depth": plan.depth},
+            "bytes_materialized": g.store.io_stats["bytes_materialized"],
+        }, indent=1))
     elif args.cmd == "stats":
         print(json.dumps(g.store.stats(), indent=1))
     elif args.cmd == "gc":

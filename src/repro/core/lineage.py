@@ -303,6 +303,9 @@ class LineageGraph:
             node.name, artifact, parent_ref=parent_ref,
             tests=[t for t in self.tests if t.applies_to(node)])
         if node.artifact_ref != old_ref:
+            # the cached artifact is a lazy view bound to old_ref — drop it
+            # BEFORE releasing, or later accesses resolve against dead objects
+            node.artifact = None
             self.store.release(old_ref)
             self.store.gc()
 

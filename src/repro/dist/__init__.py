@@ -1,0 +1,14 @@
+"""Single-device distribution shim: sharding rules + gradient compression.
+
+The production system runs SPMD over a (pod, data, model) mesh; this package
+holds the pieces the rest of the codebase programs against. On a single-device
+host every sharding call degrades to the identity, so models, training, and
+the launch dry-runs share one code path.
+"""
+
+from repro.dist import compression
+from repro.dist.sharding import (batch_spec, get_mesh, param_spec, shard,
+                                 use_mesh)
+
+__all__ = ["compression", "shard", "param_spec", "batch_spec", "use_mesh",
+           "get_mesh"]

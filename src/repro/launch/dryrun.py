@@ -30,6 +30,7 @@ import jax
 import numpy as np
 
 from repro.dist.sharding import use_mesh
+from repro.launch.hlo_cost import xla_cost_analysis
 from repro.launch.mesh import make_production_mesh
 from repro.launch.shapes import SHAPES, cell_supported, input_specs
 from repro.models.config import get_config, list_archs
@@ -109,7 +110,7 @@ def calibrate_flops_semantics(mesh) -> str:
                              sharding=NamedSharding(mesh, P(None, "model")))
     with mesh:
         compiled = jax.jit(lambda x, y: x @ y).lower(a, b).compile()
-    flops = compiled.cost_analysis().get("flops", 0.0)
+    flops = xla_cost_analysis(compiled).get("flops", 0.0)
     expected_global = 2.0 * m * k * n
     _FLOPS_SEMANTICS = ("per_device" if flops < expected_global / 2
                         else "global")
@@ -197,7 +198,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool,
         t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = xla_cost_analysis(compiled)
     hlo_text = compiled.as_text()
 
     # loop-aware per-device accounting (hlo_cost.py) — XLA's cost_analysis

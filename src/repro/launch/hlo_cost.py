@@ -24,7 +24,18 @@ from __future__ import annotations
 
 import json
 import re
-from typing import Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
+
+
+def xla_cost_analysis(compiled: Any) -> Dict[str, float]:
+    """``compiled.cost_analysis()`` normalized across JAX versions.
+
+    Older releases return a one-dict-per-device list; newer ones return the
+    dict directly. Always hand back a dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
 
 _DTYPE_BYTES = {"pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2,
                 "u16": 2, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4,

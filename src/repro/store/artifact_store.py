@@ -5,29 +5,128 @@ Committing an artifact produces a *manifest* (JSON, itself CAS-stored):
     {name, model_type, graph, metadata, depth,
      params: {key: {kind: "full", tensor: <hash>}
                   | {kind: "delta", blob: <hash>, parent_ref, parent_key,
-                     codec, eps, shape, dtype}}}
+                     codec, eps, shape, dtype, hash}}}
 
 Full tensors dedup automatically through content hashing; delta entries point
-at their parent manifest and decompress recursively up the chain to the first
-non-delta ancestor (paper §4). ``max_chain_depth`` bounds reconstruction
+at their parent manifest (paper §4). ``max_chain_depth`` bounds reconstruction
 latency, like git packfile delta-depth limits (beyond-paper knob).
+
+Reconstruction is *plan-based and lazy* (DESIGN.md §3.3–3.4):
+
+* ``load_artifact`` returns a lazy artifact whose params materialize
+  per-tensor on first access — checkout/diff/traversal never force a full
+  model into memory;
+* ``resolve_chain(ref, key)`` walks one parameter's delta chain iteratively
+  and emits a flat :class:`ReconstructionPlan` — ``(blob, parent)`` hops down
+  to the first full tensor (or a cache hit);
+* ``materialize_param`` executes the plan bottom-up with one
+  ``dequant_apply`` per hop, so peak memory is O(tensor x chain depth), not
+  O(full model x chain depth) like the old recursive whole-artifact loader
+  (kept as ``load_artifact_recursive`` — the benchmark baseline);
+* materialized tensors land in a byte-budget LRU (``cache_budget_bytes``)
+  shared by every artifact the store serves.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 from collections import OrderedDict
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.common.hashing import bytes_hash, tensor_hash
-from repro.core.artifact import ModelArtifact
+from repro.core.artifact import LazyParams, ModelArtifact, ParamRef
 from repro.core.graphir import LayerGraph
 from repro.store.cas import CAS
-from repro.store.delta import (CompressResult, decompress_param,
+from repro.store.delta import (CompressResult, ParamDelta, decompress_param,
                                delta_compression)
+
+
+# ---------------------------------------------------------------------------
+# Reconstruction plans
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaHop:
+    """One delta application: child (ref, key) reconstructed from its parent."""
+
+    ref: str            # manifest holding this delta entry
+    key: str            # child param key
+    blob: str           # CAS key of the compressed quantized delta
+    codec: str
+    eps: float
+    shape: Tuple[int, ...]
+    dtype: str
+    qdtype: str
+
+
+@dataclasses.dataclass(frozen=True)
+class ReconstructionPlan:
+    """Flat recipe for one parameter: start at ``base``, apply ``hops`` in order.
+
+    ``base_kind`` is ``"full"`` (base is a CAS tensor hash) or ``"cache"``
+    (base is a (ref, key) already materialized in the tensor cache)."""
+
+    base_kind: str
+    base: Any
+    hops: Tuple[DeltaHop, ...]
+
+    @property
+    def depth(self) -> int:
+        return len(self.hops)
+
+
+class TensorCache:
+    """Byte-budget LRU over materialized tensors, keyed by (manifest_ref, key)."""
+
+    def __init__(self, budget_bytes: int) -> None:
+        self.budget_bytes = budget_bytes
+        self._entries: "OrderedDict[Tuple[str, str], np.ndarray]" = OrderedDict()
+        self.bytes_used = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, key: Tuple[str, str]) -> Optional[np.ndarray]:
+        arr = self._entries.get(key)
+        if arr is None:
+            self.misses += 1
+            return None
+        self._entries.move_to_end(key)
+        self.hits += 1
+        return arr
+
+    def put(self, key: Tuple[str, str], arr: np.ndarray) -> None:
+        nbytes = int(arr.nbytes)
+        if nbytes > self.budget_bytes:
+            return  # larger than the whole budget: never cacheable
+        old = self._entries.pop(key, None)
+        if old is not None:
+            self.bytes_used -= int(old.nbytes)
+        self._entries[key] = arr
+        self.bytes_used += nbytes
+        while self.bytes_used > self.budget_bytes and self._entries:
+            _, evicted = self._entries.popitem(last=False)
+            self.bytes_used -= int(evicted.nbytes)
+            self.evictions += 1
+
+    def contains(self, key: Tuple[str, str]) -> bool:
+        return key in self._entries
+
+    def drop_ref(self, ref: str) -> None:
+        for k in [k for k in self._entries if k[0] == ref]:
+            self.bytes_used -= int(self._entries.pop(k).nbytes)
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self.bytes_used = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
 
 
 class ArtifactStore:
@@ -36,10 +135,12 @@ class ArtifactStore:
     def __init__(self, root: Optional[str] = None, codec: str = "lzma",
                  eps: float = 1e-4, t_thr: float = 0.5,
                  delta_enabled: bool = True, per_param: bool = True,
-                 max_chain_depth: int = 8, cache_size: int = 4,
+                 max_chain_depth: int = 8,
+                 cache_budget_bytes: int = 256 * 2**20,
                  zero_frac_prefilter: float = 0.0,
-                 backend: Optional[str] = None) -> None:
-        self.cas = CAS(root)
+                 backend: Optional[str] = None,
+                 pack_threshold: int = 4096) -> None:
+        self.cas = CAS(root, pack_threshold=pack_threshold)
         self.codec = codec
         self.eps = eps
         self.t_thr = t_thr
@@ -49,10 +150,12 @@ class ArtifactStore:
         self.zero_frac_prefilter = zero_frac_prefilter
         self.backend = backend
         self._manifests: Dict[str, Dict[str, Any]] = {}
-        self._cache: "OrderedDict[str, ModelArtifact]" = OrderedDict()
-        self._cache_size = cache_size
+        self.cache = TensorCache(cache_budget_bytes)
         self.logical_bytes = 0
         self.last_result: Optional[CompressResult] = None
+        # per-store materialization accounting (reset with reset_io_stats)
+        self.io_stats = {"tensors_materialized": 0, "bytes_materialized": 0,
+                         "chain_hops": 0, "plans_resolved": 0}
         self._stats_path = (os.path.join(root, "store_stats.json")
                             if root else None)
         if self._stats_path and os.path.exists(self._stats_path):
@@ -72,6 +175,8 @@ class ArtifactStore:
         if self.delta_enabled and parent_ref is not None:
             parent_manifest = self.get_manifest(parent_ref)
             if parent_manifest["depth"] < self.max_chain_depth:
+                # lazy view: delta_compression materializes parent params
+                # one-at-a-time through the chain resolver
                 parent = self.load_artifact(parent_ref)
                 result = delta_compression(
                     artifact, parent, t_thr=self.t_thr, eps=self.eps,
@@ -85,8 +190,9 @@ class ArtifactStore:
                     # persist the *reconstructed* model as this version's truth
                     artifact = result.reconstructed
 
-        for key, value in artifact.params.items():
-            value = np.asarray(value)
+        for key in artifact.params:
+            value = np.asarray(artifact.params[key])
+            thash = tensor_hash(value)  # content identity for every entry
             if key in deltas:
                 d = deltas[key]
                 blob_hash = self.cas.put_bytes(d.blob)
@@ -94,13 +200,13 @@ class ArtifactStore:
                                 "parent_ref": parent_ref,
                                 "parent_key": d.parent_key, "codec": d.codec,
                                 "eps": d.eps, "shape": list(d.shape),
-                                "dtype": d.dtype, "qdtype": d.qdtype}
+                                "dtype": d.dtype, "qdtype": d.qdtype,
+                                "hash": thash}
             else:
-                thash = tensor_hash(value)  # content-based hashing dedup
-                self.cas.put_tensor(value, key=thash)
+                self.cas.put_tensor(value, key=thash)  # content-hash dedup
                 entries[key] = {"kind": "full", "tensor": thash,
                                 "shape": list(value.shape),
-                                "dtype": str(value.dtype)}
+                                "dtype": str(value.dtype), "hash": thash}
 
         delta_parents = sorted({e["parent_ref"] for e in entries.values()
                                 if e["kind"] == "delta"})
@@ -118,18 +224,126 @@ class ArtifactStore:
         payload = json.dumps(manifest, sort_keys=True, default=str).encode()
         ref = self.cas.put_bytes(payload, key="m_" + bytes_hash(payload))
         self._manifests[ref] = manifest
+        self.cas.flush()  # commit point: index + refcounts durable
         return ref
 
-    # -- load --------------------------------------------------------------------
+    # -- manifests ----------------------------------------------------------------
     def get_manifest(self, ref: str) -> Dict[str, Any]:
         if ref not in self._manifests:
             self._manifests[ref] = json.loads(self.cas.get_bytes(ref))
         return self._manifests[ref]
 
-    def load_artifact(self, ref: str) -> ModelArtifact:
-        if ref in self._cache:
-            self._cache.move_to_end(ref)
-            return self._cache[ref]
+    def _entry(self, ref: str, key: str) -> Dict[str, Any]:
+        manifest = self.get_manifest(ref)
+        try:
+            return manifest["params"][key]
+        except KeyError:
+            raise KeyError(f"manifest {ref!r} has no param {key!r}")
+
+    # -- chain resolution ---------------------------------------------------------
+    def resolve_chain(self, ref: str, key: str) -> ReconstructionPlan:
+        """Walk one parameter's delta chain; emit a flat reconstruction plan.
+
+        Iterative (no recursion) and single-parameter: sibling tensors are
+        never touched. The walk stops early at the first chain link already
+        materialized in the tensor cache."""
+        self.io_stats["plans_resolved"] += 1
+        hops: List[DeltaHop] = []
+        cur_ref, cur_key = ref, key
+        # Termination is a visited-set, NOT this store's max_chain_depth:
+        # the store may have been reopened with a smaller depth knob than the
+        # one the chain was written with, and that is valid data.
+        seen = set()
+        while True:
+            if (cur_ref, cur_key) in seen:
+                raise RuntimeError(
+                    f"delta chain cycle at {cur_ref!r}:{cur_key!r} "
+                    f"(corrupt manifest chain)")
+            seen.add((cur_ref, cur_key))
+            if hops and self.cache.contains((cur_ref, cur_key)):
+                return ReconstructionPlan("cache", (cur_ref, cur_key),
+                                          tuple(reversed(hops)))
+            e = self._entry(cur_ref, cur_key)
+            if e["kind"] == "full":
+                return ReconstructionPlan("full", e["tensor"],
+                                          tuple(reversed(hops)))
+            hops.append(DeltaHop(
+                ref=cur_ref, key=cur_key, blob=e["blob"], codec=e["codec"],
+                eps=e["eps"], shape=tuple(e["shape"]), dtype=e["dtype"],
+                qdtype=e.get("qdtype", "int32")))
+            cur_ref, cur_key = e["parent_ref"], e["parent_key"]
+
+    def materialize_param(self, ref: str, key: str,
+                          plan: Optional[ReconstructionPlan] = None
+                          ) -> np.ndarray:
+        """Materialize one parameter, executing its plan bottom-up.
+
+        Pass ``plan`` to execute a chain already resolved by
+        ``resolve_chain`` (avoids a second manifest walk)."""
+        cached = self.cache.get((ref, key))
+        if cached is not None:
+            return cached
+        if plan is None:
+            plan = self.resolve_chain(ref, key)
+        if plan.base_kind == "cache":
+            value = self.cache.get(plan.base)
+            if value is None:  # evicted between resolve and execute: replan
+                self.cache.misses -= 1  # don't double-count the probe
+                return self.materialize_param(ref, key)
+        else:
+            value = self.cas.get_tensor(plan.base)
+            self._count_materialization(value)
+        for hop in plan.hops:
+            d = ParamDelta(child_key=hop.key, parent_key="", codec=hop.codec,
+                           blob=self.cas.get_bytes(hop.blob), eps=hop.eps,
+                           shape=hop.shape, dtype=hop.dtype, raw_bytes=0,
+                           qdtype=hop.qdtype)
+            value = decompress_param(np.asarray(value), d,
+                                     backend=self.backend)
+            self.io_stats["chain_hops"] += 1
+            self._count_materialization(value)
+            self.cache.put((hop.ref, hop.key), value)
+        if not plan.hops:  # full tensors cache under their own (ref, key) too
+            self.cache.put((ref, key), value)
+        return value
+
+    def _count_materialization(self, value: np.ndarray) -> None:
+        self.io_stats["tensors_materialized"] += 1
+        self.io_stats["bytes_materialized"] += int(np.asarray(value).nbytes)
+
+    def reset_io_stats(self) -> None:
+        for k in self.io_stats:
+            self.io_stats[k] = 0
+
+    # -- load --------------------------------------------------------------------
+    def load_artifact(self, ref: str, lazy: bool = True) -> ModelArtifact:
+        """Checkout ``ref``. Lazy by default: params materialize on access."""
+        manifest = self.get_manifest(ref)
+        refs = {
+            key: ParamRef(store=self, ref=ref, key=key,
+                          shape=tuple(e.get("shape", ())),
+                          dtype=e.get("dtype", "float32"),
+                          hash=e.get("hash") or e.get("tensor"))
+            for key, e in manifest["params"].items()
+        }
+        params: Any = LazyParams(refs)
+        if not lazy:
+            params = {k: params[k] for k in params}
+        return ModelArtifact(
+            graph=LayerGraph.from_json(manifest["graph"]),
+            params=params,
+            model_type=manifest.get("model_type", "generic"),
+            metadata=manifest.get("metadata", {}),
+        )
+
+    def load_artifact_recursive(self, ref: str,
+                                _depth: int = 0) -> ModelArtifact:
+        """Pre-plan eager loader (reference implementation).
+
+        Recursively materializes every FULL ancestor artifact to resolve the
+        chain — O(full model x chain depth) peak memory. Kept as the
+        benchmark baseline for ``benchmarks/bench_compression.py``; all
+        production paths go through ``load_artifact``/``materialize_param``."""
         manifest = self.get_manifest(ref)
         params: Dict[str, np.ndarray] = {}
         parent_cache: Dict[str, ModelArtifact] = {}
@@ -139,9 +353,9 @@ class ArtifactStore:
             else:
                 pref = e["parent_ref"]
                 if pref not in parent_cache:
-                    parent_cache[pref] = self.load_artifact(pref)  # recursive chain
+                    parent_cache[pref] = self.load_artifact_recursive(
+                        pref, _depth + 1)
                 parent_val = parent_cache[pref].params[e["parent_key"]]
-                from repro.store.delta import ParamDelta
                 d = ParamDelta(child_key=key, parent_key=e["parent_key"],
                                blob=self.cas.get_bytes(e["blob"]),
                                codec=e["codec"], eps=e["eps"],
@@ -149,16 +363,12 @@ class ArtifactStore:
                                raw_bytes=0, qdtype=e.get("qdtype", "int32"))
                 params[key] = decompress_param(np.asarray(parent_val), d,
                                                backend=self.backend)
-        artifact = ModelArtifact(
+        return ModelArtifact(
             graph=LayerGraph.from_json(manifest["graph"]),
             params=params,
             model_type=manifest.get("model_type", "generic"),
             metadata=manifest.get("metadata", {}),
         )
-        self._cache[ref] = artifact
-        while len(self._cache) > self._cache_size:
-            self._cache.popitem(last=False)
-        return artifact
 
     # -- lifecycle ------------------------------------------------------------------
     def release(self, ref: str) -> None:
@@ -167,12 +377,14 @@ class ArtifactStore:
             manifest = self.get_manifest(ref)
         except Exception:
             return
-        for e in manifest["params"].values():
-            self.cas.decref(e["tensor"] if e["kind"] == "full" else e["blob"])
-        for pref in manifest.get("delta_parents", []):
-            self.cas.decref(pref)
-        self.cas.decref(ref)
-        self._cache.pop(ref, None)
+        with self.cas.batched_refcounts():  # ONE durable write for the lot
+            for e in manifest["params"].values():
+                self.cas.decref(e["tensor"] if e["kind"] == "full"
+                                else e["blob"])
+            for pref in manifest.get("delta_parents", []):
+                self.cas.decref(pref)
+            self.cas.decref(ref)
+        self.cache.drop_ref(ref)
 
     def gc(self) -> int:
         return self.cas.gc()
@@ -195,5 +407,11 @@ class ArtifactStore:
             "physical_bytes": self.cas.physical_bytes(),
             "compression_ratio": self.compression_ratio(),
             "objects": self.cas.object_count(),
+            "cache_bytes": self.cache.bytes_used,
+            "cache_entries": len(self.cache),
+            "cache_hits": self.cache.hits,
+            "cache_misses": self.cache.misses,
+            "cache_evictions": self.cache.evictions,
+            **self.cas.pack_stats(),
             **self.cas.stats,
         }

@@ -1,17 +1,33 @@
-"""Content-addressable store with refcounting (paper §4, content-based hashing).
+"""Content-addressable store with refcounting + packfiles (paper §4; DESIGN.md §3.2).
 
 Objects (tensors, delta blobs, manifests) are keyed by SHA-256 — writing the
 same content twice costs nothing, which is exactly how parameters shared
-across lineage-graph models are stored once. Supports a directory backend
-(one file per object + a refcount journal) and an in-memory backend for
-tests/benchmarks. All commits are atomic (tmp + rename).
+across lineage-graph models are stored once.
+
+Two placement tiers, mirroring git's loose-object/packfile split:
+
+* **loose**: objects >= ``pack_threshold`` bytes get one file each under
+  ``objects/`` (atomic tmp + rename);
+* **packed**: small objects (delta blobs, manifests) append into
+  ``packs/pack-<n>.pack`` as self-describing records
+  ``[keylen u16][key][datalen u32][data]`` with an in-memory offset index.
+  The index is persisted as JSON beside the refcounts, and because records
+  are self-describing any appended-but-unindexed tail is recovered by a
+  bounded scan on reopen — a crash can never orphan a packed object.
+
+``physical_bytes()`` / ``object_count()`` are O(1) counters maintained on
+every mutation (the directory scans they replaced were O(n) per call).
+Refcounts persist on ``incref``/``decref`` so a crash between a decref and
+the next ``gc()`` can neither leak nor double-free objects.
 """
 
 from __future__ import annotations
 
+import contextlib
 import io
 import json
 import os
+import struct
 import threading
 from typing import Dict, Optional, Tuple
 
@@ -19,30 +35,154 @@ import numpy as np
 
 from repro.common.hashing import bytes_hash, tensor_hash
 
+_REC_HEAD = struct.Struct("<HI")  # (keylen, datalen)
+
 
 class CAS:
-    def __init__(self, root: Optional[str] = None) -> None:
+    def __init__(self, root: Optional[str] = None,
+                 pack_threshold: int = 4096,
+                 pack_max_bytes: int = 64 * 2**20) -> None:
         self.root = root
+        self.pack_threshold = pack_threshold
+        self.pack_max_bytes = pack_max_bytes
         self._mem: Dict[str, bytes] = {}
         self.refcounts: Dict[str, int] = {}
-        self._lock = threading.Lock()
-        self.stats = {"puts": 0, "dedup_hits": 0, "bytes_written": 0,
+        self._lock = threading.RLock()
+        self._defer_persist = 0
+        self.stats = {"puts": 0, "gets": 0, "dedup_hits": 0, "bytes_written": 0,
                       "bytes_deduped": 0}
+        # pack state: key -> (pack_id, offset, length); offsets point at data
+        self._pack_index: Dict[str, Tuple[int, int, int]] = {}
+        self._pack_sizes: Dict[int, int] = {}   # pack_id -> bytes on disk
+        self._pack_dead: Dict[int, int] = {}    # pack_id -> dead payload bytes
+        self._next_pack = 0
+        # O(1) accounting counters
+        self._object_count = 0
+        self._physical_bytes = 0
         if root is not None:
             os.makedirs(os.path.join(root, "objects"), exist_ok=True)
+            os.makedirs(os.path.join(root, "packs"), exist_ok=True)
             rc = os.path.join(root, "refcounts.json")
             if os.path.exists(rc):
                 with open(rc) as f:
                     self.refcounts = json.load(f)
+            self._load_pack_index()
+            self._rebuild_counters()
 
-    # -- raw object interface ------------------------------------------------
+    # -- layout ----------------------------------------------------------------
     def _obj_path(self, key: str) -> str:
         return os.path.join(self.root, "objects", key)
 
+    def _pack_path(self, pack_id: int) -> str:
+        return os.path.join(self.root, "packs", f"pack-{pack_id:06d}.pack")
+
+    def _index_path(self) -> str:
+        return os.path.join(self.root, "packs", "pack-index.json")
+
+    # -- pack index persistence / recovery --------------------------------------
+    def _load_pack_index(self) -> None:
+        if os.path.exists(self._index_path()):
+            with open(self._index_path()) as f:
+                payload = json.load(f)
+            self._pack_index = {k: tuple(v)
+                                for k, v in payload["entries"].items()}
+            self._pack_sizes = {int(k): v
+                                for k, v in payload["pack_sizes"].items()}
+            self._pack_dead = {int(k): v
+                               for k, v in payload.get("dead", {}).items()}
+            self._next_pack = payload.get("next_pack", 0)
+        # Recover records appended after the last index write (or ever, if the
+        # index file is gone): scan each pack's unindexed tail.
+        for fname in sorted(os.listdir(os.path.join(self.root, "packs"))):
+            if not fname.endswith(".pack"):
+                continue
+            pid = int(fname.rsplit("-", 1)[1].split(".")[0])
+            # keep appending to the newest pack (rotation happens on write
+            # when it fills) — bumping past it would leak one stub pack per
+            # process lifetime
+            self._next_pack = max(self._next_pack, pid)
+            path = self._pack_path(pid)
+            actual = os.path.getsize(path)
+            indexed = self._pack_sizes.get(pid, 0)
+            if actual > indexed:
+                self._scan_pack_tail(pid, indexed, actual)
+        self._sweep_orphan_packs()
+
+    def _scan_pack_tail(self, pack_id: int, start: int, end: int) -> None:
+        with open(self._pack_path(pack_id), "rb") as f:
+            f.seek(start)
+            pos = start
+            while pos + _REC_HEAD.size <= end:
+                head = f.read(_REC_HEAD.size)
+                if len(head) < _REC_HEAD.size:
+                    break
+                klen, dlen = _REC_HEAD.unpack(head)
+                if pos + _REC_HEAD.size + klen + dlen > end:
+                    break  # torn tail record from a crash mid-append: ignore
+                key = f.read(klen).decode("utf-8", "replace")
+                data_off = pos + _REC_HEAD.size + klen
+                f.seek(dlen, os.SEEK_CUR)
+                if key not in self._pack_index:
+                    self._pack_index[key] = (pack_id, data_off, dlen)
+                pos = data_off + dlen
+            self._pack_sizes[pack_id] = pos
+        if pos < end:
+            # torn record from a crash mid-append — drop it so later appends
+            # land exactly at the indexed offset
+            with open(self._pack_path(pack_id), "r+b") as f:
+                f.truncate(pos)
+
+    def _persist_pack_index(self) -> None:
+        if self.root is None:
+            return
+        payload = {"entries": {k: list(v) for k, v in self._pack_index.items()},
+                   "pack_sizes": {str(k): v for k, v in self._pack_sizes.items()},
+                   "dead": {str(k): v for k, v in self._pack_dead.items()},
+                   "next_pack": self._next_pack}
+        tmp = self._index_path() + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(payload, f)
+        os.replace(tmp, self._index_path())
+
+    def _rebuild_counters(self) -> None:
+        """One O(n) pass at open; every later query is O(1)."""
+        objdir = os.path.join(self.root, "objects")
+        loose = [f for f in os.listdir(objdir) if not f.endswith(".tmp")]
+        self._object_count = len(loose) + len(self._pack_index)
+        self._physical_bytes = sum(
+            os.path.getsize(os.path.join(objdir, f)) for f in loose)
+        self._physical_bytes += sum(self._pack_sizes.values())
+
+    # -- raw object interface ------------------------------------------------
     def has(self, key: str) -> bool:
         if self.root is None:
             return key in self._mem
-        return key in self.refcounts or os.path.exists(self._obj_path(key))
+        return (key in self._pack_index or key in self.refcounts
+                or os.path.exists(self._obj_path(key)))
+
+    def _write_loose(self, key: str, data: bytes) -> None:
+        tmp = self._obj_path(key) + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(data)
+        os.replace(tmp, self._obj_path(key))
+        self._physical_bytes += len(data)
+
+    def _write_packed(self, key: str, data: bytes) -> None:
+        pid = self._next_pack
+        path = self._pack_path(pid)
+        size = self._pack_sizes.get(pid, 0)
+        if size and size >= self.pack_max_bytes:
+            pid = self._next_pack = self._next_pack + 1
+            path = self._pack_path(pid)
+            size = 0
+        kb = key.encode()
+        record = _REC_HEAD.pack(len(kb), len(data)) + kb + data
+        with open(path, "ab") as f:
+            f.write(record)
+        self._pack_index[key] = (pid, size + _REC_HEAD.size + len(kb),
+                                 len(data))
+        self._pack_sizes[pid] = size + len(record)
+        self._physical_bytes += len(record)
 
     def put_bytes(self, data: bytes, key: Optional[str] = None) -> str:
         key = key or bytes_hash(data)
@@ -55,24 +195,35 @@ class CAS:
                 return key
             if self.root is None:
                 self._mem[key] = data
+                self._physical_bytes += len(data)
+            elif len(data) < self.pack_threshold:
+                self._write_packed(key, data)
             else:
-                tmp = self._obj_path(key) + ".tmp"
-                with open(tmp, "wb") as f:
-                    f.write(data)
-                os.replace(tmp, self._obj_path(key))
+                self._write_loose(key, data)
+            self._object_count += 1
             self.stats["bytes_written"] += len(data)
             self.refcounts[key] = self.refcounts.get(key, 0) + 1
             return key
 
     def get_bytes(self, key: str) -> bytes:
+        self.stats["gets"] += 1
         if self.root is None:
             return self._mem[key]
+        entry = self._pack_index.get(key)
+        if entry is not None:
+            pid, off, length = entry
+            with open(self._pack_path(pid), "rb") as f:
+                f.seek(off)
+                return f.read(length)
         with open(self._obj_path(key), "rb") as f:
             return f.read()
 
     def size(self, key: str) -> int:
         if self.root is None:
             return len(self._mem[key])
+        entry = self._pack_index.get(key)
+        if entry is not None:
+            return entry[2]
         return os.path.getsize(self._obj_path(key))
 
     # -- tensors ---------------------------------------------------------------
@@ -98,12 +249,30 @@ class CAS:
     def incref(self, key: str) -> None:
         with self._lock:
             self.refcounts[key] = self.refcounts.get(key, 0) + 1
+            self._persist_refcounts()
 
     def decref(self, key: str) -> None:
         with self._lock:
             if key not in self.refcounts:
                 return
-            self.refcounts[key] -= 1
+            # clamp at zero: a double-release must not push the count negative
+            # (a later incref would then resurrect a still-dead object)
+            self.refcounts[key] = max(0, self.refcounts[key] - 1)
+            self._persist_refcounts()
+
+    @contextlib.contextmanager
+    def batched_refcounts(self):
+        """Coalesce refcount persistence across a multi-incref/decref
+        operation (e.g. releasing a whole manifest) into ONE durable write at
+        exit — otherwise every call rewrites refcounts.json, O(objects) each."""
+        with self._lock:
+            self._defer_persist += 1
+        try:
+            yield
+        finally:
+            with self._lock:
+                self._defer_persist -= 1
+                self._persist_refcounts()
 
     def gc(self) -> int:
         """Delete unreferenced objects; returns bytes reclaimed."""
@@ -112,33 +281,111 @@ class CAS:
             dead = [k for k, c in self.refcounts.items() if c <= 0]
             for k in dead:
                 if self.root is None:
-                    reclaimed += len(self._mem.pop(k, b""))
+                    blob = self._mem.pop(k, None)
+                    if blob is not None:
+                        reclaimed += len(blob)
+                        self._physical_bytes -= len(blob)
+                        self._object_count -= 1
+                elif k in self._pack_index:
+                    pid, _, length = self._pack_index.pop(k)
+                    self._pack_dead[pid] = self._pack_dead.get(pid, 0) + length
+                    reclaimed += length
+                    self._object_count -= 1
                 else:
                     p = self._obj_path(k)
                     if os.path.exists(p):
-                        reclaimed += os.path.getsize(p)
+                        n = os.path.getsize(p)
+                        reclaimed += n
+                        self._physical_bytes -= n
+                        self._object_count -= 1
                         os.remove(p)
                 del self.refcounts[k]
-        self._persist_refcounts()
+            self._compact_packs()
+            self._persist_refcounts()
+            self._persist_pack_index()
         return reclaimed
 
-    def _persist_refcounts(self) -> None:
+    def _compact_packs(self) -> None:
+        """Rewrite packs whose dead payload exceeds half their size.
+
+        Crash-safe ordering: live records are COPIED into the active pack and
+        the index persisted BEFORE the old pack file is unlinked — a crash at
+        any point leaves either the old locations (index not yet persisted)
+        or the new ones plus an orphan pack, which ``_sweep_orphan_packs``
+        removes on the next open. Live data is never the only copy at risk."""
         if self.root is None:
+            return
+        for pid, dead_bytes in list(self._pack_dead.items()):
+            size = self._pack_sizes.get(pid, 0)
+            if dead_bytes <= 0 or dead_bytes * 2 < size:
+                continue
+            live = {k: e for k, e in self._pack_index.items() if e[0] == pid}
+            path = self._pack_path(pid)
+            if live:
+                if self._next_pack == pid:
+                    self._next_pack = pid + 1  # never copy into the victim
+                with open(path, "rb") as f:
+                    blobs = {}
+                    for k, (_, off, length) in live.items():
+                        f.seek(off)
+                        blobs[k] = f.read(length)
+                for k in live:
+                    del self._pack_index[k]
+                for k, blob in blobs.items():
+                    self._write_packed(k, blob)
+            self._pack_dead.pop(pid, None)
+            # persist with the victim still fully accounted (so a crash here
+            # cannot resurrect its dead records via a tail scan)...
+            self._persist_pack_index()
+            # ...then unlink and drop it from the books
+            if os.path.exists(path):
+                os.remove(path)
+            self._physical_bytes -= size
+            self._pack_sizes.pop(pid, None)
+
+    def _sweep_orphan_packs(self) -> None:
+        """Remove fully-superseded packs left by a crash mid-compaction."""
+        referenced = {e[0] for e in self._pack_index.values()}
+        for pid in list(self._pack_sizes):
+            if pid in referenced or pid == self._next_pack:
+                continue
+            path = self._pack_path(pid)
+            size = self._pack_sizes[pid]
+            if os.path.exists(path):
+                os.remove(path)
+            self._physical_bytes -= size
+            self._pack_sizes.pop(pid, None)
+            self._pack_dead.pop(pid, None)
+
+    def _persist_refcounts(self) -> None:
+        if self.root is None or self._defer_persist > 0:
             return
         tmp = os.path.join(self.root, "refcounts.json.tmp")
         with open(tmp, "w") as f:
             json.dump(self.refcounts, f)
         os.replace(tmp, os.path.join(self.root, "refcounts.json"))
 
+    def flush(self) -> None:
+        """Persist refcounts + pack index (called by stores at commit points)."""
+        with self._lock:
+            self._persist_refcounts()
+            self._persist_pack_index()
+
     # -- accounting ---------------------------------------------------------------
     def physical_bytes(self) -> int:
-        if self.root is None:
-            return sum(len(v) for v in self._mem.values())
-        objdir = os.path.join(self.root, "objects")
-        return sum(os.path.getsize(os.path.join(objdir, f))
-                   for f in os.listdir(objdir) if not f.endswith(".tmp"))
+        """Total bytes on disk (or in memory) — O(1) counter."""
+        return self._physical_bytes
 
     def object_count(self) -> int:
+        """Live objects (loose + packed) — O(1) counter."""
         if self.root is None:
             return len(self._mem)
-        return len(os.listdir(os.path.join(self.root, "objects")))
+        return self._object_count
+
+    def pack_stats(self) -> Dict[str, int]:
+        return {
+            "packs": len(self._pack_sizes),
+            "packed_objects": len(self._pack_index),
+            "packed_bytes": sum(self._pack_sizes.values()),
+            "pack_dead_bytes": sum(self._pack_dead.values()),
+        }

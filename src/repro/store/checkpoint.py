@@ -33,12 +33,29 @@ from repro.core.lineage import LineageGraph
 from repro.store.artifact_store import ArtifactStore
 
 
+def _keystr(path) -> str:
+    """``jax.tree_util.keystr(path, simple=True, separator="/")`` compat.
+
+    The ``simple``/``separator`` kwargs only exist on newer JAX; render the
+    key path entries directly so any 0.4.x works."""
+    parts = []
+    for entry in path:
+        for attr in ("key", "name", "idx"):
+            v = getattr(entry, attr, None)
+            if v is not None:
+                parts.append(str(v))
+                break
+        else:
+            parts.append(str(entry).strip("[].'\""))
+    return "/".join(parts)
+
+
 def flatten_state(state) -> Dict[str, np.ndarray]:
     """Pytree -> flat {path: host ndarray}. Gathers from device (blocking)."""
     flat = {}
     leaves = jax.tree_util.tree_flatten_with_path(state)[0]
     for path, leaf in leaves:
-        key = jax.tree_util.keystr(path, simple=True, separator="/")
+        key = _keystr(path)
         flat[key] = np.asarray(jax.device_get(leaf))
     return flat
 
@@ -48,7 +65,7 @@ def unflatten_state(template, flat: Dict[str, np.ndarray]):
     paths, treedef = jax.tree_util.tree_flatten_with_path(template)
     leaves = []
     for path, leaf in paths:
-        key = jax.tree_util.keystr(path, simple=True, separator="/")
+        key = _keystr(path)
         value = flat[key]
         dtype = getattr(leaf, "dtype", None)
         if dtype is not None and str(value.dtype) != str(dtype):
@@ -178,11 +195,17 @@ class CheckpointManager:
         node = self.lineage.nodes[self._node_name(step)]
         artifact = node.get_model()
         if verify:
+            # Bit-rot check against commit-time content hashes. The lazy view
+            # materializes one tensor at a time, so verification streams at
+            # O(tensor) peak memory. Delta entries are covered too: plan
+            # execution is bit-exact w.r.t. the commit-time reconstruction.
             manifest = self.store.get_manifest(node.artifact_ref)
             for key, e in manifest["params"].items():
-                if e["kind"] == "full":
-                    if tensor_hash(artifact.params[key]) != e["tensor"]:
-                        raise IOError(f"checkpoint corruption detected in {key!r}")
+                expected = e.get("hash") or e.get("tensor")
+                if expected is None:
+                    continue  # pre-hash manifest (older store version)
+                if tensor_hash(artifact.params[key]) != expected:
+                    raise IOError(f"checkpoint corruption detected in {key!r}")
         flat = artifact.params
         if template is None:
             return flat, step

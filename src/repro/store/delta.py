@@ -29,6 +29,16 @@ def _signature(arr: np.ndarray) -> Tuple:
     return (tuple(np.shape(arr)), str(np.asarray(arr).dtype))
 
 
+def _signature_of(artifact: ModelArtifact, key: str) -> Tuple:
+    """(shape, dtype) signature WITHOUT materializing lazy parameters."""
+    params = artifact.params
+    spec_of = getattr(params, "spec_of", None)
+    if spec_of is not None:
+        shape, dtype = spec_of(key)
+        return (tuple(shape), str(dtype))
+    return _signature(params[key])
+
+
 def _ordered_keys(artifact: ModelArtifact) -> List[str]:
     """Param keys in layer-graph topological order (fallback: dict order)."""
     try:
@@ -48,8 +58,8 @@ def lcs_param_matching(parent: ModelArtifact, child: ModelArtifact
     """
     pk = _ordered_keys(parent)
     ck = _ordered_keys(child)
-    ps = [_signature(parent.params[k]) for k in pk]
-    cs = [_signature(child.params[k]) for k in ck]
+    ps = [_signature_of(parent, k) for k in pk]
+    cs = [_signature_of(child, k) for k in ck]
     if ps == cs:  # common fast path: same architecture
         return list(zip(pk, ck))
 

@@ -1,7 +1,8 @@
 """Hypothesis property tests on system invariants (diff/traversal/storage)."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+from hyp_compat import given, settings, st
 
 from repro.core import (LayerGraph, LayerNode, LineageGraph, ModelArtifact,
                         all_parents_first, module_diff)

@@ -2,7 +2,8 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from hyp_compat import given, settings, st
 
 from repro.core import LineageGraph
 from repro.store import (CAS, CODECS, ArtifactStore, delta_compression,
