@@ -57,6 +57,16 @@ def main() -> None:
          f"models={rows[1]['created']}")
 
     print("=" * 72)
+    print("§5 collaboration — sync negotiation dedup (objects moved vs total)")
+    print("=" * 72)
+    from benchmarks import bench_sync
+    rows = bench_sync.main()
+    incr = next(r for r in rows if r["step"] == "incremental push")
+    _csv("sync_dedup", incr["seconds"] * 1e6,
+         f"dedup={incr['dedup_ratio']:.2%},"
+         f"moved={incr['objects_transferred']}/{incr['objects_total']}")
+
+    print("=" * 72)
     print("Storage kernels — CPU wall-time + TPU roofline bound")
     print("=" * 72)
     rows = bench_kernels.main()

@@ -15,6 +15,25 @@ Commands (analogous to git's CLI, per the paper):
     stats                       storage statistics (ratio, dedup, objects,
                                 packfiles, tensor cache)
     gc                          collect unreferenced objects
+
+Collaboration commands (paper §5; DESIGN.md §8):
+    remote add <name> <url>     register a peer repository (url = directory)
+    remote list                 configured remotes
+    remote remove <name>        unregister a remote
+    push <remote> [--filter P] [--force]
+                                ship the (fnmatch-filtered) lineage subgraph:
+                                have/want negotiation transfers only objects
+                                the remote is missing; a lineage conflict
+                                aborts before publish unless --force
+    pull <remote> [--filter P]  fetch the (filtered) remote subgraph and
+                                three-way merge it into the local lineage;
+                                divergent models auto-merge when the §5
+                                decision tree allows
+    clone <url> <dest>          materialize a remote repo into a fresh
+                                directory (sets up 'origin' tracking)
+    fsck                        integrity pass: re-hash all CAS objects,
+                                verify manifest closures, report dangling
+                                refs / refcount drift / stale transfers
 """
 
 from __future__ import annotations
@@ -63,8 +82,31 @@ def main(argv=None) -> int:
     p.add_argument("key")
     sub.add_parser("stats")
     sub.add_parser("gc")
+    p = sub.add_parser("remote")
+    p.add_argument("action", choices=["add", "list", "remove"])
+    p.add_argument("name", nargs="?")
+    p.add_argument("url", nargs="?")
+    p = sub.add_parser("push")
+    p.add_argument("remote")
+    p.add_argument("--filter", default=None)
+    p.add_argument("--force", action="store_true")
+    p = sub.add_parser("pull")
+    p.add_argument("remote")
+    p.add_argument("--filter", default=None)
+    p = sub.add_parser("clone")
+    p.add_argument("url")
+    p.add_argument("dest")
+    p.add_argument("--filter", default=None)
+    sub.add_parser("fsck")
 
     args = ap.parse_args(argv)
+
+    if args.cmd == "clone":  # dest is the repo; don't touch args.repo
+        from repro import remote as rm
+        report = rm.clone(args.url, args.dest, filter=args.filter)
+        print(json.dumps(report.to_json(), indent=1))
+        return 0 if report.merge is None or not report.merge.conflicts else 1
+
     g = _graph(args.repo)
 
     if args.cmd == "log":
@@ -133,6 +175,40 @@ def main(argv=None) -> int:
         print(json.dumps(g.store.stats(), indent=1))
     elif args.cmd == "gc":
         print(f"reclaimed {g.store.gc()} bytes")
+    elif args.cmd == "remote":
+        from repro import remote as rm
+        if args.action == "add":
+            if not args.name or not args.url:
+                print("usage: remote add <name> <url>")
+                return 1
+            rm.remote_add(args.repo, args.name, args.url)
+            print(f"remote {args.name} -> {args.url}")
+        elif args.action == "remove":
+            rm.remote_remove(args.repo, args.name)
+            print(f"removed remote {args.name}")
+        else:
+            print(json.dumps(rm.remote_list(args.repo), indent=1))
+    elif args.cmd in ("push", "pull"):
+        from repro import remote as rm
+        transport, name = rm.resolve_transport(args.repo, args.remote)
+        state = rm.RemoteState(args.repo, name)
+        if args.cmd == "push":
+            report = rm.push(g, transport, filter=args.filter, state=state,
+                             force=args.force)
+        else:
+            report = rm.pull(g, transport, filter=args.filter, state=state)
+        print(json.dumps(report.to_json(), indent=1))
+        if args.cmd == "push" and not report.published:
+            return 1
+        return 1 if report.merge is not None and report.merge.conflicts else 0
+    elif args.cmd == "fsck":
+        from repro.remote import LocalJournalStore
+        roots = [n.artifact_ref for n in g.nodes.values() if n.artifact_ref]
+        report = g.store.fsck(roots)
+        report["in_flight_transfers"] = LocalJournalStore(
+            args.repo).journal_list()
+        print(json.dumps(report, indent=1))
+        return 0 if report["ok"] else 1
     return 0
 
 

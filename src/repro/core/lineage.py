@@ -185,23 +185,42 @@ class LineageGraph:
     def _meta_path(self) -> str:
         return os.path.join(self.path, "lineage.json")
 
+    def to_payload(self) -> Dict[str, Any]:
+        """The graph's JSON document — what ``save`` persists and what the
+        remote sync protocol exchanges (``repro.remote``)."""
+        return {"nodes": [n.to_json() for n in self.nodes.values()]}
+
     def save(self) -> None:
         if self.path is None:
             return
         os.makedirs(self.path, exist_ok=True)
-        payload = {"nodes": [n.to_json() for n in self.nodes.values()]}
+        # Atomic AND durable: fsync before the rename, so a crash at any
+        # point leaves either the complete old document or the complete new
+        # one — never a torn lineage.json (a concurrent pull may read it).
         tmp = self._meta_path() + ".tmp"
         with open(tmp, "w") as f:
-            json.dump(payload, f, indent=1)
-        os.replace(tmp, self._meta_path())  # atomic commit
+            json.dump(self.to_payload(), f, indent=1)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self._meta_path())
 
     def _load(self) -> None:
         with open(self._meta_path()) as f:
-            payload = json.load(f)
+            self._install_payload(json.load(f))
+
+    def _install_payload(self, payload: Dict[str, Any]) -> None:
         for obj in payload["nodes"]:
             node = LineageNode.from_json(obj)
             node._graph = self
             self.nodes[node.name] = node
+
+    def replace_nodes(self, payload: Dict[str, Any]) -> None:
+        """Swap in a merged document (remote sync): rebuild every node from
+        JSON — cached in-memory artifacts are dropped, refs reload lazily
+        from the store — and persist."""
+        self.nodes = {}
+        self._install_payload(payload)
+        self._commit()
 
     def _commit(self) -> None:
         if self.autosave:

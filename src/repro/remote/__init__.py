@@ -1,0 +1,24 @@
+"""MGit remote sync: push/pull of lineage subgraphs with CAS negotiation.
+
+The collaboration pillar (paper §5, DESIGN.md §8): a byte-oriented
+:class:`Transport` to a peer repository, have/want object negotiation over
+manifest closures, resumable journalled transfer, and a three-way
+lineage-metadata merge on pull that reuses the §5 conflict classification.
+"""
+
+from repro.remote.journal import LocalJournalStore, chunk_id, transfer_id
+from repro.remote.negotiate import TransferPlan, plan_transfer, walk_manifests
+from repro.remote.sync import (LineageMergeReport, NodeMergeOutcome,
+                               RemoteState, SyncReport, clone, merge_lineage,
+                               pull, push, remote_add, remote_list,
+                               remote_remove, resolve_transport)
+from repro.remote.transport import LocalTransport, Transport
+
+__all__ = [
+    "Transport", "LocalTransport",
+    "TransferPlan", "plan_transfer", "walk_manifests",
+    "LocalJournalStore", "chunk_id", "transfer_id",
+    "SyncReport", "LineageMergeReport", "NodeMergeOutcome", "RemoteState",
+    "push", "pull", "clone", "merge_lineage",
+    "remote_add", "remote_list", "remote_remove", "resolve_transport",
+]

@@ -1,0 +1,112 @@
+"""Have/want object negotiation over manifest closures (DESIGN.md §8.2).
+
+A lineage subgraph is shipped as the *closure* of its manifests: every
+manifest, every full-tensor and delta-blob object its entries reference, and
+— because delta entries reconstruct against ``(parent_ref, parent_key)`` —
+every chain-parent manifest, transitively. The closure traversal itself
+lives in :mod:`repro.store.manifest_walk` (shared with the store's refcount
+replay and fsck); this module layers the sync-protocol decisions on top.
+
+:func:`plan_transfer` subtracts what the receiver advertised via ``have``
+and fixes the deterministic transfer order — data before metadata
+(blobs/tensors first, then manifests shallow-chain-first), so an
+interrupted transfer never leaves a manifest on the receiver whose payload
+objects are guaranteed absent. The *full* ordered closure (``plan.order``)
+is what the resumable journal chunks over: it is identical across attempts,
+so chunk ids recorded before a crash match on retry (DESIGN.md §8.4).
+
+Delta-chain awareness lives in :func:`chain_refs` + :func:`needs_flatten`:
+a filtered (shallow) push prefers shipping delta blobs when the receiver
+already has — or is about to receive — the chain base, and falls back to
+flattening the manifest to full tensors when the base lies outside the
+selection (§8.3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Sequence, Set
+
+from repro.store.manifest_walk import (Fetch, ManifestInfo, closure_keys,
+                                       parse_manifest, walk_manifests)
+
+__all__ = [
+    "Fetch", "ManifestInfo", "parse_manifest", "walk_manifests",
+    "closure_keys", "chunked", "chain_refs", "needs_flatten",
+    "TransferPlan", "plan_transfer", "CHUNK_OBJECTS",
+]
+
+#: objects fetched per negotiation/transfer batch
+CHUNK_OBJECTS = 32
+
+
+def chunked(seq: Sequence[str], n: int = CHUNK_OBJECTS) -> Iterable[List[str]]:
+    seq = list(seq)
+    for i in range(0, len(seq), n):
+        yield seq[i:i + n]
+
+
+def chain_refs(closure: Dict[str, ManifestInfo], ref: str) -> List[str]:
+    """The delta chain above ``ref``: its parent manifests, transitively."""
+    out: List[str] = []
+    frontier = list(closure[ref].parents)
+    seen: Set[str] = set()
+    while frontier:
+        p = frontier.pop()
+        if p in seen:
+            continue
+        seen.add(p)
+        out.append(p)
+        if p in closure:
+            frontier.extend(closure[p].parents)
+    return out
+
+
+def needs_flatten(closure: Dict[str, ManifestInfo], ref: str,
+                  shipped: Set[str], receiver_has: Set[str]) -> bool:
+    """True when ``ref``'s delta chain cannot reconstruct on the receiver.
+
+    Ship the delta form when every chain parent is either part of the
+    selection (``shipped``) or already on the receiver; otherwise the caller
+    must flatten ``ref`` to full tensors (the shallow-push fallback)."""
+    return any(p not in shipped and p not in receiver_has
+               for p in chain_refs(closure, ref))
+
+
+@dataclasses.dataclass
+class TransferPlan:
+    """Negotiated transfer: what to send, in which deterministic order."""
+
+    order: List[str]            # FULL closure in transfer order (stable)
+    wants: List[str]            # the subset missing on the receiver
+    total: int                  # closure size (for dedup-ratio reporting)
+
+    @property
+    def transferred(self) -> int:
+        return len(self.wants)
+
+    @property
+    def dedup_ratio(self) -> float:
+        """Fraction of the closure the negotiation avoided sending."""
+        if self.total == 0:
+            return 1.0
+        return 1.0 - len(self.wants) / self.total
+
+
+def plan_transfer(closure: Dict[str, ManifestInfo],
+                  have: Set[str]) -> TransferPlan:
+    """Fix the transfer order and subtract the receiver's ``have`` set.
+
+    Data objects ship before manifests, manifests shallow-chain-first — so a
+    crash mid-transfer can strand data objects (harmless: content-addressed,
+    refcount-rebuilt later) but never a manifest whose chain is knowably
+    incomplete *behind* it in the stream. The order is a pure function of
+    the closure, NOT of ``have``, so resumed attempts chunk identically."""
+    keys = closure_keys(closure)
+    data = sorted(k for k in keys if k not in closure)
+    manifests = sorted(closure, key=lambda r: (closure[r].depth, r))
+    order = data + manifests
+    have = set(have)
+    return TransferPlan(order=order,
+                        wants=[k for k in order if k not in have],
+                        total=len(keys))

@@ -1,0 +1,156 @@
+"""Transport — the wire interface between a local repo and a remote peer.
+
+Every method is one protocol round-trip and moves only bytes and keys, never
+live objects: ``have`` answers the negotiation (DESIGN.md §8.2),
+``read_objects``/``write_objects`` move CAS payloads in batches,
+``fetch_lineage``/``publish_lineage`` exchange the graph metadata document,
+and the ``journal_*`` trio persists transfer progress on the receiving side
+so an interrupted push resumes instead of restarting (§8.4). The interface
+maps 1:1 onto HTTP endpoints (``GET /have``, ``POST /objects``, ...) so a
+network transport can slot in without touching the sync engine.
+
+:class:`LocalTransport` is the filesystem implementation: the remote is just
+another repo directory, opened through its own :class:`ArtifactStore` — which
+is also what a server process would do on its side of an HTTP transport.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from abc import ABC, abstractmethod
+from typing import Dict, Mapping, Optional, Sequence, Set
+
+from repro.store.artifact_store import ArtifactStore
+
+
+class Transport(ABC):
+    """Abstract peer repository endpoint."""
+
+    url: str
+
+    @abstractmethod
+    def ensure_repo(self) -> None:
+        """Create the remote repository layout if it does not exist yet."""
+
+    @abstractmethod
+    def fetch_lineage(self) -> Optional[Dict]:
+        """The remote's lineage payload (``{"nodes": [...]}``), or None."""
+
+    @abstractmethod
+    def publish_lineage(self, payload: Dict) -> None:
+        """Atomically replace the remote lineage document (the commit point)."""
+
+    @abstractmethod
+    def have(self, keys: Sequence[str]) -> Set[str]:
+        """Negotiation: the subset of ``keys`` the remote already stores."""
+
+    @abstractmethod
+    def read_objects(self, keys: Sequence[str]) -> Dict[str, bytes]:
+        """Fetch a batch of CAS objects by key."""
+
+    @abstractmethod
+    def write_objects(self, objects: Mapping[str, bytes]) -> None:
+        """Store a batch of CAS objects (idempotent per key)."""
+
+    @abstractmethod
+    def finalize(self, roots: Sequence[str]) -> None:
+        """Post-transfer: rebuild remote refcounts from the given lineage roots."""
+
+    # -- transfer journal (receiver side) -----------------------------------
+    @abstractmethod
+    def journal_load(self, transfer_id: str) -> Optional[Dict]: ...
+
+    @abstractmethod
+    def journal_write(self, transfer_id: str, payload: Dict) -> None: ...
+
+    @abstractmethod
+    def journal_clear(self, transfer_id: str) -> None: ...
+
+    @abstractmethod
+    def journal_list(self) -> Sequence[str]:
+        """Ids of in-flight (or crashed) transfers — fsck surfaces these."""
+
+
+class LocalTransport(Transport):
+    """Filesystem peer: ``url`` is another repo directory on this machine."""
+
+    def __init__(self, url: str) -> None:
+        self.url = os.path.abspath(url)
+        self._store: Optional[ArtifactStore] = None
+
+    # The store opens lazily so constructing a transport (e.g. ``remote add``)
+    # has no filesystem side effects on the remote.
+    def _open(self) -> ArtifactStore:
+        if self._store is None:
+            self._store = ArtifactStore(root=self.url)
+        return self._store
+
+    def _lineage_path(self) -> str:
+        return os.path.join(self.url, "lineage.json")
+
+    def _journal_dir(self) -> str:
+        return os.path.join(self.url, "transfers")
+
+    # -- Transport ----------------------------------------------------------
+    def ensure_repo(self) -> None:
+        os.makedirs(self.url, exist_ok=True)
+        self._open()
+
+    def fetch_lineage(self) -> Optional[Dict]:
+        if not os.path.exists(self._lineage_path()):
+            return None
+        with open(self._lineage_path()) as f:
+            return json.load(f)
+
+    def publish_lineage(self, payload: Dict) -> None:
+        tmp = self._lineage_path() + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(payload, f, indent=1)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self._lineage_path())
+
+    def have(self, keys: Sequence[str]) -> Set[str]:
+        cas = self._open().cas
+        return {k for k in keys if cas.has(k)}
+
+    def read_objects(self, keys: Sequence[str]) -> Dict[str, bytes]:
+        cas = self._open().cas
+        return {k: cas.get_bytes(k) for k in keys}
+
+    def write_objects(self, objects: Mapping[str, bytes]) -> None:
+        store = self._open()
+        store.import_objects(objects)
+
+    def finalize(self, roots: Sequence[str]) -> None:
+        self._open().rebuild_refcounts(roots)
+
+    # -- journal ------------------------------------------------------------
+    def _journal_path(self, transfer_id: str) -> str:
+        return os.path.join(self._journal_dir(), f"{transfer_id}.json")
+
+    def journal_load(self, transfer_id: str) -> Optional[Dict]:
+        path = self._journal_path(transfer_id)
+        if not os.path.exists(path):
+            return None
+        with open(path) as f:
+            return json.load(f)
+
+    def journal_write(self, transfer_id: str, payload: Dict) -> None:
+        os.makedirs(self._journal_dir(), exist_ok=True)
+        tmp = self._journal_path(transfer_id) + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(payload, f)
+        os.replace(tmp, self._journal_path(transfer_id))
+
+    def journal_clear(self, transfer_id: str) -> None:
+        path = self._journal_path(transfer_id)
+        if os.path.exists(path):
+            os.remove(path)
+
+    def journal_list(self) -> Sequence[str]:
+        if not os.path.isdir(self._journal_dir()):
+            return []
+        return sorted(f[:-5] for f in os.listdir(self._journal_dir())
+                      if f.endswith(".json"))

@@ -30,6 +30,7 @@ Reconstruction is *plan-based and lazy* (DESIGN.md §3.3–3.4):
 from __future__ import annotations
 
 import dataclasses
+import io
 import json
 import os
 from collections import OrderedDict
@@ -43,6 +44,7 @@ from repro.core.graphir import LayerGraph
 from repro.store.cas import CAS
 from repro.store.delta import (CompressResult, ParamDelta, decompress_param,
                                delta_compression)
+from repro.store.manifest_walk import walk_manifests
 
 
 # ---------------------------------------------------------------------------
@@ -369,6 +371,141 @@ class ArtifactStore:
             model_type=manifest.get("model_type", "generic"),
             metadata=manifest.get("metadata", {}),
         )
+
+    # -- sync/integrity support (DESIGN.md §8) ------------------------------------
+    def manifest_closure(self, refs: Sequence[str]
+                         ) -> Tuple[Dict[str, Any], List[str]]:
+        """Transitive storage dependencies of ``refs`` along delta chains.
+
+        Returns ``(closure, missing)``: ``{manifest_ref: ManifestInfo}`` via
+        the shared walk (``repro.store.manifest_walk``) plus the refs that
+        could not be read."""
+        missing: List[str] = []
+
+        def fetch(keys: Sequence[str]) -> Dict[str, bytes]:
+            out: Dict[str, bytes] = {}
+            for k in keys:
+                try:
+                    out[k] = self.cas.get_bytes(k)
+                except Exception:
+                    pass  # the walk records it as missing
+            return out
+
+        closure = walk_manifests(fetch, refs, missing=missing)
+        return closure, missing
+
+    def expected_refcounts(self, roots: Sequence[str]) -> Dict[str, int]:
+        """Reconstruct exact refcounts from the manifest graph.
+
+        Mirrors commit-time accounting: each manifest holds one reference
+        per param entry on its tensor/blob and one per delta parent; each
+        occurrence in ``roots`` (a lineage ``artifact_ref``) holds one
+        reference on the manifest itself. Only keys *reachable from roots*
+        appear — counts for anything else are out of scope."""
+        closure, _ = self.manifest_closure(roots)
+        counts: Dict[str, int] = {ref: 0 for ref in closure}
+        for info in closure.values():
+            for k in info.objects:
+                counts[k] = counts.get(k, 0) + 1
+            for p in info.parents:
+                counts[p] = counts.get(p, 0) + 1
+        for r in roots:
+            if r in closure:
+                counts[r] += 1
+        return counts
+
+    def rebuild_refcounts(self, roots: Sequence[str]) -> Dict[str, int]:
+        """Install exact refcounts for everything reachable from ``roots``.
+
+        The post-transfer step of a sync (DESIGN.md §8.5): imported objects
+        arrive with placeholder counts; one rebuild makes the receiving side
+        bit-equivalent to having committed the graph locally. Keys NOT
+        reachable from ``roots`` are left untouched, so callers owning other
+        root sets lose nothing."""
+        counts = self.expected_refcounts(roots)
+        with self.cas.batched_refcounts():
+            for key, count in counts.items():
+                if self.cas.has(key):
+                    self.cas.refcounts[key] = count
+        self.cas.flush()
+        return counts
+
+    def import_objects(self, objects) -> int:
+        """Raw object ingestion for sync transfers (idempotent per key).
+
+        Keys are trusted as content addresses here; ``fsck`` re-verifies.
+        Returns bytes actually written (dedup hits cost nothing)."""
+        written = 0
+        for key, data in objects.items():
+            if not self.cas.has(key):
+                self.cas.put_bytes(data, key=key)
+                written += len(data)
+        self.cas.flush()
+        return written
+
+    def export_flat_manifest(self, ref: str, name: Optional[str] = None
+                             ) -> Tuple[str, Dict[str, bytes]]:
+        """Build a flattened (depth-0) equivalent of ``ref`` *transiently*.
+
+        The shallow-push fallback: when a receiver can't get the delta
+        chain, ship materialized tensors instead. Returns ``(flat_ref,
+        objects)`` where ``objects`` holds the new manifest payload plus
+        every tensor's npy bytes, ready for the wire. Nothing is committed
+        into THIS store — a sender must stay refcount-clean after a push
+        (committing here would orphan a manifest no lineage node references
+        and bump shared-tensor counts into permanent fsck drift). Peak
+        memory is O(model): tensors materialize through the chain resolver
+        one at a time but their serialized bytes are all held for transfer.
+        Plan execution is bit-exact with commit-time reconstruction
+        (DESIGN.md §3.3), so the flattened model is bit-identical to the
+        chained one."""
+        manifest = self.get_manifest(ref)
+        artifact = self.load_artifact(ref)
+        entries: Dict[str, Any] = {}
+        objects: Dict[str, bytes] = {}
+        for key in artifact.params:
+            value = np.asarray(artifact.params[key])
+            thash = tensor_hash(value)
+            buf = io.BytesIO()
+            np.save(buf, value, allow_pickle=False)
+            objects[thash] = buf.getvalue()
+            entries[key] = {"kind": "full", "tensor": thash,
+                            "shape": list(value.shape),
+                            "dtype": str(value.dtype), "hash": thash}
+        flat = {
+            "name": name or manifest.get("name", "flat"),
+            "model_type": manifest.get("model_type", "generic"),
+            "metadata": manifest.get("metadata", {}),
+            "graph": manifest["graph"],
+            "params": entries,
+            "depth": 0,
+            "delta_parents": [],
+        }
+        payload = json.dumps(flat, sort_keys=True, default=str).encode()
+        flat_ref = "m_" + bytes_hash(payload)
+        objects[flat_ref] = payload
+        return flat_ref, objects
+
+    def fsck(self, roots: Sequence[str] = ()) -> Dict[str, Any]:
+        """CAS integrity pass plus manifest-graph cross-checks.
+
+        Extends :meth:`CAS.fsck` with: ``missing_objects`` (keys the manifest
+        closure of ``roots`` references but the CAS lacks) and
+        ``refcount_drift`` (``{key: [actual, expected]}``; undercounts risk
+        premature collection, overcounts only delay it)."""
+        report = self.cas.fsck()
+        closure, missing_refs = self.manifest_closure(roots)
+        expected = self.expected_refcounts(roots)
+        missing = sorted(set(missing_refs)
+                         | {k for k in expected if not self.cas.has(k)})
+        drift = {k: [self.cas.refcounts.get(k, 0), v]
+                 for k, v in expected.items()
+                 if self.cas.has(k) and self.cas.refcounts.get(k, 0) != v}
+        report["manifests_reachable"] = len(closure)
+        report["missing_objects"] = missing
+        report["refcount_drift"] = drift
+        report["ok"] = bool(report["ok"] and not missing and not drift)
+        return report
 
     # -- lifecycle ------------------------------------------------------------------
     def release(self, ref: str) -> None:

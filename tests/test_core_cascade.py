@@ -57,6 +57,24 @@ def test_next_version_name():
     assert next_version_name("m@v9") == "m@v10"
 
 
+def test_next_version_name_edge_cases():
+    # non-numeric suffix after @v: treated as part of the name, not a version
+    assert next_version_name("exp@vfinal") == "exp@vfinal@v2"
+    # bare trailing @v (empty suffix) likewise gets a fresh version tag
+    assert next_version_name("m@v") == "m@v@v2"
+    # only the LAST @v segment is the version; earlier ones are name text
+    assert next_version_name("a@v1@v7") == "a@v1@v8"
+    # large and zero-padded versions parse as integers
+    assert next_version_name("m@v99") == "m@v100"
+    assert next_version_name("m@v007") == "m@v8"
+    # 'v2' without the @ separator is name text
+    assert next_version_name("v2") == "v2@v2"
+    # names containing '@' but not '@v' are untouched name text
+    assert next_version_name("user@host") == "user@host@v2"
+    # negative-looking suffix is not a digit sequence
+    assert next_version_name("m@v-1") == "m@v-1@v2"
+
+
 def test_cascade_creates_new_versions(tmp_path):
     g = _build(tmp_path)
     new_root = finetune_like(g.get_model("mlm"), seed=999, scale=1e-3)

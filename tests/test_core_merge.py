@@ -82,6 +82,117 @@ def test_dependent_changes_resolved_by_tests():
     assert "l2" in r.test_results
 
 
+def test_conflict_both_add_same_layer():
+    """Concurrently added layers with the same name collide (Figure 2)."""
+    m = _branch_model()
+
+    def with_extra(model, seed):
+        from repro.core.graphir import LayerGraph, LayerNode
+        g = LayerGraph()
+        for n in model.graph.nodes.values():
+            g.add_node(LayerNode(n.name, n.op_type, params=dict(n.params)))
+        for s, d in model.graph.edges:
+            g.add_edge(s, d)
+        g.add_node(LayerNode("extra", "linear",
+                             params={"w": ((4, 4), "float32")}))
+        g.add_edge("head", "extra")
+        rng = np.random.default_rng(seed)
+        params = dict(model.params)
+        params["extra/w"] = rng.normal(size=(4, 4)).astype(np.float32)
+        return type(model)(g, params, model_type=model.model_type)
+
+    r = merge_artifacts(m, with_extra(m, 1), with_extra(m, 2))
+    assert r.status == CONFLICT
+    assert "extra" in r.conflicting_layers
+
+
+def test_conflict_removed_vs_changed_layer():
+    """One side removes a layer the other side retrained -> conflict."""
+    m = _branch_model()
+
+    def without(model, layer):
+        from repro.core.graphir import LayerGraph, LayerNode
+        g = LayerGraph()
+        for n in model.graph.nodes.values():
+            if n.name != layer:
+                g.add_node(LayerNode(n.name, n.op_type, params=dict(n.params)))
+        for s, d in model.graph.edges:
+            if layer not in (s, d) and s in g.nodes and d in g.nodes:
+                g.add_edge(s, d)
+        params = {k: v for k, v in model.params.items()
+                  if not k.startswith(layer + "/")}
+        return type(model)(g, params, model_type=model.model_type)
+
+    r = merge_artifacts(m, without(m, "b1"), _edit(m, "b1"))
+    assert r.status == CONFLICT
+    assert "b1" in r.conflicting_layers
+
+
+def test_dependent_changes_failing_tests_conflict():
+    """Tests below threshold flip a dependent merge to CONFLICT (Figure 2)."""
+    m = make_chain_model(seed=0)
+    tests = [RegisteredTest(name="l2", fn=l2_test, model_type="toy")]
+    r = merge_artifacts(m, _edit(m, "L0", 1e-6), _edit(m, "L2", 1e-6),
+                        tests=tests, test_threshold=1e9)  # unreachable bar
+    assert r.status == CONFLICT
+    assert r.merged is None
+    assert "l2" in r.test_results  # results reported even on failure
+    assert sorted(r.conflicting_layers) == ["L0", "L2"]
+
+
+def test_structural_add_merges_cleanly():
+    """One side adds a layer, the other edits an independent head."""
+    g = LayerGraph()
+    for name in ("stem", "head_a", "head_b"):
+        g.add_node(LayerNode(name, "linear", params={"w": ((8, 8), "float32")}))
+    g.add_edge("stem", "head_a")
+    g.add_edge("stem", "head_b")
+    rng = np.random.default_rng(0)
+    m = ModelArtifact(g, {f"{n}/w": rng.normal(size=(8, 8)).astype(np.float32)
+                          for n in g.nodes}, model_type="toy")
+
+    from repro.core.graphir import LayerGraph as LG, LayerNode as LN
+    g2 = LG()
+    for n in m.graph.nodes.values():
+        g2.add_node(LN(n.name, n.op_type, params=dict(n.params)))
+    for s, d in m.graph.edges:
+        g2.add_edge(s, d)
+    g2.add_node(LN("adapter", "linear", params={"w": ((8, 8), "float32")}))
+    g2.add_edge("head_a", "adapter")
+    params = dict(m.params)
+    params["adapter/w"] = rng.normal(size=(8, 8)).astype(np.float32)
+    with_adapter = ModelArtifact(g2, params, model_type="toy")
+
+    r = merge_artifacts(m, with_adapter, _edit(m, "head_b"))
+    assert r.status in (NO_CONFLICT, POSSIBLE_CONFLICT)
+    assert r.merged is not None
+    assert "adapter" in r.merged.graph.nodes
+    np.testing.assert_allclose(r.merged.params["head_b/w"],
+                               m.params["head_b/w"] + 0.1, rtol=1e-6)
+
+
+def test_merge_no_common_ancestor_is_conflict(tmp_path):
+    g = LineageGraph(path=str(tmp_path))
+    g.add_node(_branch_model(seed=0), "island1")
+    g.add_node(_branch_model(seed=1), "island2")
+    r = merge(g, "island1", "island2")
+    assert r.status == CONFLICT
+    assert "no common ancestor" in r.detail
+    assert "merge(island1,island2)" not in g
+
+
+def test_merge_explicit_ancestor_overrides_search(tmp_path):
+    g = LineageGraph(path=str(tmp_path))
+    base = _branch_model()
+    g.add_node(base, "base")
+    for name, layer in (("u1", "b1"), ("u2", "b2")):
+        g.add_node(_edit(base, layer), name)
+        g.add_edge("base", name)
+    r = g.merge("u1", "u2", ancestor="base")
+    assert r.status in (NO_CONFLICT, POSSIBLE_CONFLICT)
+    assert r.merged is not None
+
+
 def test_graph_level_merge_inserts_node(tmp_path):
     g = LineageGraph(path=str(tmp_path))
     base = _branch_model()
