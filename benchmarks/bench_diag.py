@@ -1,0 +1,164 @@
+"""Diagnostics engine benchmark (paper §4 test-reuse; DESIGN.md §9.1).
+
+Builds a BERT-style lineage pool (G1' families: roots + finetuned
+derivatives, committed through the delta-compressed store), registers one
+metric probe per model family, then measures:
+
+  cold    first sweep — every (test, model) pair executes, results land in
+          the content-addressed ledger
+  warm    second sweep through a FRESH runner — everything answers from the
+          persisted ledger: asserts a >0 cache-hit ratio and ZERO tensor
+          materializations
+  scoped  a head-scoped probe across versions whose head is frozen — the
+          scoped content key collapses them to one ledger entry
+
+Usage: PYTHONPATH=src:. python -m benchmarks.bench_diag [--smoke]
+"""
+
+from __future__ import annotations
+
+import shutil
+import sys
+import tempfile
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from benchmarks.pools import base_model, finetune, reinit_head
+from repro.core import LineageGraph
+from repro.diag import DiagnosticsRunner
+from repro.store import ArtifactStore
+
+FAMILIES: Dict[str, Tuple[int, int]] = {"bert": (10, 128), "roberta": (20, 128),
+                                        "albert": (30, 96), "distil": (40, 64)}
+
+
+def probe_mean_activation(model) -> float:
+    """Deterministic accuracy stand-in: probe-input mean activation."""
+    first = sorted(model.params)[0]
+    d = np.asarray(model.params[first]).shape[0]
+    x = np.ones((2, d), np.float32)
+    for name in model.graph.topo_order():
+        w = model.params.get(f"{name}/w")
+        if w is None:
+            continue
+        x = np.tanh(x @ np.asarray(w))
+    return float(np.mean(x) * 100)
+
+
+def probe_head_norm(model) -> float:
+    return float(np.linalg.norm(np.asarray(model.params["head/w"])))
+
+
+def build_pool(root_dir: str, n_children: int = 2, d_scale: float = 1.0,
+               n_versions: int = 1) -> LineageGraph:
+    """G1'-style pool: unrelated family roots, finetuned children, and
+    head-frozen versions of each child (exercises scoped memoization)."""
+    g = LineageGraph(path=root_dir, store=ArtifactStore(root=root_dir))
+    for fam, (seed, d) in FAMILIES.items():
+        d = max(8, int(d * d_scale))
+        root = base_model(seed=seed, d=d, prefix=f"{fam}_", model_type=fam)
+        g.add_node(root, fam)
+        for i in range(n_children):
+            child = finetune(reinit_head(root, seed=seed + i),
+                             seed=seed + 50 + i, scale=1e-4, density=0.15)
+            name = f"{fam}-task{i}"
+            g.add_node(child, name)
+            g.add_edge(fam, name)
+            prev = name
+            for v in range(n_versions):
+                # Trunk-only finetune with the head restored bit-exactly
+                # from the STORED parent (the delta-reconstructed truth) —
+                # the zero head-delta round-trips exactly, so all versions
+                # share one stored head and the scoped probe memoizes.
+                vname = f"{name}@v{v + 2}"
+                stored = g.store.load_artifact(
+                    g.nodes[prev].artifact_ref, lazy=False)
+                vm = finetune(stored, seed=seed + 90 + v, density=0.1)
+                vm = vm.replace_params(
+                    {"head/w": stored.params["head/w"]})
+                g.add_node(vm, vname)
+                g.add_version_edge(prev, vname)
+                prev = vname
+    return g
+
+
+def register_probes(g: LineageGraph) -> None:
+    for fam in FAMILIES:
+        g.register_test_function(probe_mean_activation, f"{fam}/activation",
+                                 mt=fam)
+        g.register_test_function(probe_head_norm, f"{fam}/head_norm", mt=fam,
+                                 scope="head")
+
+
+def main(smoke: bool = False) -> Dict:
+    root_dir = tempfile.mkdtemp(prefix="mgit-bench-diag-")
+    try:
+        d_scale = 0.25 if smoke else 1.0
+        g = build_pool(root_dir, n_children=1 if smoke else 2,
+                       d_scale=d_scale, n_versions=1 if smoke else 2)
+        register_probes(g)
+        store = g.store
+
+        # -- cold: everything executes, eager baseline for comparison --------
+        store.reset_io_stats()
+        t0 = time.perf_counter()
+        cold = DiagnosticsRunner(g).run()
+        cold_s = time.perf_counter() - t0
+        cold_materialized = store.io_stats["tensors_materialized"]
+
+        # -- warm: fresh runner, same store — pure ledger reads ---------------
+        store.reset_io_stats()
+        t0 = time.perf_counter()
+        warm = DiagnosticsRunner(g).run()
+        warm_s = time.perf_counter() - t0
+        warm_materialized = store.io_stats["tensors_materialized"]
+
+        assert warm.cache_hit_ratio > 0, "second pass must hit the ledger"
+        assert warm.executed == 0, "unchanged models must not re-execute"
+        assert warm_materialized == 0, \
+            f"warm pass materialized {warm_materialized} tensors"
+        assert cold.values() == warm.values(), "memoized values must agree"
+
+        # -- scoped: head-frozen versions share the head-probe entry ----------
+        # Count distinct executions of the scoped probe vs nodes it covers.
+        scoped_runs = sum(
+            1 for res in cold.results.values() for r in res.values()
+            if r.test.endswith("head_norm") and not r.cached)
+        scoped_nodes = sum(
+            1 for res in cold.results.values() for r in res.values()
+            if r.test.endswith("head_norm"))
+        row = {
+            "n_models": len(g.nodes),
+            "n_pairs": cold.total,
+            "cold_s": cold_s,
+            "warm_s": warm_s,
+            "speedup": cold_s / max(warm_s, 1e-9),
+            "cache_hit_ratio": warm.cache_hit_ratio,
+            "cold_materialized": cold_materialized,
+            "warm_materialized": warm_materialized,
+            "scoped_probe_nodes": scoped_nodes,
+            "scoped_probe_executions": scoped_runs,
+            "scoped_skips": scoped_nodes - scoped_runs,
+        }
+        assert row["scoped_skips"] > 0, \
+            "head-frozen versions must reuse the scoped ledger entry"
+
+        print(f"diag runner: {row['n_models']} models, {row['n_pairs']} "
+              f"(test,model) pairs")
+        print(f"  cold  {cold_s*1e3:8.1f} ms  "
+              f"({cold_materialized} tensors materialized)")
+        print(f"  warm  {warm_s*1e3:8.1f} ms  (0 tensors materialized, "
+              f"hit ratio {row['cache_hit_ratio']:.0%}) -> "
+              f"{row['speedup']:.1f}x")
+        print(f"  scoped head probe: {scoped_runs}/{scoped_nodes} executions "
+              f"({row['scoped_skips']} re-runs skipped via bit-identical "
+              f"submodule)")
+        return row
+    finally:
+        shutil.rmtree(root_dir, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main(smoke="--smoke" in sys.argv)

@@ -3,6 +3,9 @@
   bisect     first-failing-version search: probes used vs a linear scan
              (paper: up to 1.5x faster; asymptotically log vs linear)
   cascade    run_update_cascade end-to-end wall time over G2-style graph
+  tests      graph-wide test sweep: the eager serial ``run_tests`` path vs
+             the memoized parallel diagnostics runner (DESIGN.md §9.1) —
+             both reported so the speedup is tracked across PRs
 """
 
 from __future__ import annotations
@@ -10,10 +13,13 @@ from __future__ import annotations
 import time
 from typing import Dict, List
 
+import numpy as np
+
 from benchmarks.pools import base_model, finetune
-from repro.core import (CreationFunction, LineageGraph, bisect,
+from repro.core import (CreationFunction, LineageGraph, bfs, bisect,
                         register_creation_type, run_update_cascade,
                         version_chain)
+from repro.diag import DiagnosticsRunner
 
 
 @register_creation_type("bench-finetune")
@@ -86,6 +92,75 @@ def run_cascade(n_tasks: int = 6) -> Dict:
             "s_per_model": dt / max(len(created), 1)}
 
 
+def probe_activation(model) -> float:
+    """Eval-sized probe: a 512-row batch through the model (a test whose
+    cost is worth memoizing — paper §6.4 runs real eval sets)."""
+    first = sorted(model.params)[0]
+    d = np.asarray(model.params[first]).shape[0]
+    x = np.ones((512, d), np.float32)
+    for name in model.graph.topo_order():
+        w = model.params.get(f"{name}/w")
+        if w is None:
+            continue
+        x = np.tanh(x @ np.asarray(w))
+    return float(np.mean(x) * 100)
+
+
+def run_test_sweep(n_versions: int = 24) -> Dict:
+    """Eager serial run_tests vs memoized parallel runner, same graph.
+
+    The eager path re-executes every test each invocation; the memoized
+    runner executes once and afterwards answers from the result ledger.
+    Store-backed, like a real repo: memo keys come straight from manifest
+    content addresses (a storeless graph would pay a param-hash pass)."""
+    import shutil
+    import tempfile
+
+    from repro.store import ArtifactStore
+    root_dir = tempfile.mkdtemp(prefix="mgit-bench-func-")
+    g = LineageGraph(path=root_dir, store=ArtifactStore(root=root_dir))
+    m = base_model(seed=0, n_layers=4, d=256)
+    g.add_node(m, "m@v1")
+    prev = "m@v1"
+    for v in range(2, n_versions + 1):
+        m = finetune(m, seed=v, density=0.05)
+        name = f"m@v{v}"
+        g.add_node(m, name)
+        g.add_version_edge(prev, name)
+        prev = name
+    g.register_test_function(probe_activation, "probe/activation", mt="toy")
+
+    t0 = time.perf_counter()
+    eager1 = g.run_tests(bfs(g))
+    t_eager = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    g.run_tests(bfs(g))  # eager path pays full price again
+    t_eager2 = time.perf_counter() - t0
+
+    runner = DiagnosticsRunner(g)
+    t0 = time.perf_counter()
+    cold = runner.run()
+    t_cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    warm = DiagnosticsRunner(g).run()   # fresh runner: hits from the store
+    t_warm = time.perf_counter() - t0
+
+    try:
+        assert warm.executed == 0 and warm.cache_hit_ratio == 1.0
+        # Eager tests the node's cached in-memory artifact, the runner tests
+        # the stored truth — equal only up to delta-quantization eps.
+        for k, v in warm.values().items():
+            assert abs(v["probe/activation"]
+                       - eager1[k]["probe/activation"]) < 1e-2
+        return {"n_models": n_versions, "eager_s": t_eager,
+                "eager_rerun_s": t_eager2, "memo_cold_s": t_cold,
+                "memo_warm_s": t_warm,
+                "warm_speedup": t_eager2 / max(t_warm, 1e-9),
+                "cache_hit_ratio": warm.cache_hit_ratio}
+    finally:
+        shutil.rmtree(root_dir, ignore_errors=True)
+
+
 def main():
     b = run_bisect()
     print(f"bisect: {b['bisect_probes']} probes vs linear {b['linear_probes']} "
@@ -93,7 +168,12 @@ def main():
     c = run_cascade()
     print(f"cascade: rebuilt {c['created']} models in {c['cascade_s']:.2f}s "
           f"({c['s_per_model']:.2f}s/model)")
-    return [b, c]
+    s = run_test_sweep()
+    print(f"test sweep over {s['n_models']} models: eager re-run "
+          f"{s['eager_rerun_s']*1e3:.1f}ms vs memoized warm "
+          f"{s['memo_warm_s']*1e3:.1f}ms ({s['warm_speedup']:.1f}x, "
+          f"hit ratio {s['cache_hit_ratio']:.0%})")
+    return [b, c, s]
 
 
 if __name__ == "__main__":

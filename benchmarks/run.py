@@ -55,6 +55,19 @@ def main() -> None:
          f"probe_speedup={rows[0]['probe_speedup']:.1f}x")
     _csv("cascade", rows[1]["cascade_s"] * 1e6,
          f"models={rows[1]['created']}")
+    _csv("test_sweep", rows[2]["memo_warm_s"] * 1e6,
+         f"warm_speedup={rows[2]['warm_speedup']:.1f}x,"
+         f"hit_ratio={rows[2]['cache_hit_ratio']:.2f}")
+
+    print("=" * 72)
+    print("§4 diagnostics — memoized runner ledger (cache hits, 0-IO warm sweep)")
+    print("=" * 72)
+    from benchmarks import bench_diag
+    row = bench_diag.main(smoke=True)
+    _csv("diag_runner", row["warm_s"] * 1e6,
+         f"hit_ratio={row['cache_hit_ratio']:.2f},"
+         f"speedup={row['speedup']:.1f}x,"
+         f"scoped_skips={row['scoped_skips']}")
 
     print("=" * 72)
     print("§5 collaboration — sync negotiation dedup (objects moved vs total)")

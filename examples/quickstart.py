@@ -59,11 +59,22 @@ def main():
           tuple(round(x, 3) for x in divergence_scores(
               g.get_model("task0"), g.get_model("task1"))))
 
-    # 4. register a test + run it over the graph
+    # 4. register a test + run it over the graph. scope="head" tells the
+    #    diagnostics runner the test only reads the head submodule, so
+    #    versions sharing a bit-identical head share one memoized result.
     g.register_test_function(
         lambda m: float(np.linalg.norm(m.params["head/w"])), "head_norm",
-        mt="demo")
-    print("tests:", g.run_tests(bfs(g), re_pattern="head"))
+        mt="demo", scope="head")
+    print("tests:", g.run_tests(bfs(g), pattern="head", match="regex"))
+
+    # 4b. the memoized parallel runner: the second sweep answers entirely
+    #     from the content-addressed result ledger (zero materializations)
+    from repro.diag import DiagnosticsRunner
+    runner = DiagnosticsRunner(g)
+    cold = runner.run()
+    warm = DiagnosticsRunner(g).run()   # fresh runner: hits come from the store
+    print(f"diag: cold executed={cold.executed}, "
+          f"warm cache-hit ratio={warm.cache_hit_ratio:.0%}")
 
     # 5. merge two concurrent edits
     u1 = g.get_model("task0").replace_params(

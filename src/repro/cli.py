@@ -9,7 +9,9 @@ Commands (analogous to git's CLI, per the paper):
     add-edge <x> <y>            provenance edge
     add-version-edge <x> <y>    versioning edge
     remove-node <x>             remove node + subtree
-    test <node|--all> [--re]    run registered tests via a traversal
+    test <node|--all> [--re P | --glob P]
+                                run registered tests via a traversal
+                                (one explicit pattern mode, regex or glob)
     param <node> <key>          materialize ONE parameter (lazy checkout):
                                 prints its reconstruction plan + summary stats
     stats                       storage statistics (ratio, dedup, objects,
@@ -34,6 +36,21 @@ Collaboration commands (paper §5; DESIGN.md §8):
     fsck                        integrity pass: re-hash all CAS objects,
                                 verify manifest closures, report dangling
                                 refs / refcount drift / stale transfers
+
+Diagnostics commands (paper §4; DESIGN.md §9):
+    diag run [node] [--pattern P] [--match-glob] [--jobs N] [--force]
+             [--builtin]        memoized parallel test sweep: unchanged
+                                models answer from the result ledger with
+                                zero materializations (--builtin registers a
+                                param-RMS probe per model type so the ledger
+                                is exercisable without the Python API)
+    diag blame <node> <test>    DAG-wide regression attribution: classify
+                                each ancestor failure as introduced /
+                                inherited / merge-emergent and report the
+                                earliest failing frontier
+    diag history <node> [test]  ledger entries across the node's version
+                                chain (ModelHub-style evaluation history)
+    diag gate-report            quarantined nodes + recorded regressions
 """
 
 from __future__ import annotations
@@ -76,7 +93,11 @@ def main(argv=None) -> int:
     p.add_argument("x")
     p = sub.add_parser("test")
     p.add_argument("node", nargs="?", default=None)
-    p.add_argument("--re", dest="pattern", default=None)
+    grp = p.add_mutually_exclusive_group()
+    grp.add_argument("--re", dest="pattern", default=None,
+                     help="regex test-name filter")
+    grp.add_argument("--glob", dest="glob_pattern", default=None,
+                     help="fnmatch glob test-name filter")
     p = sub.add_parser("param")
     p.add_argument("node")
     p.add_argument("key")
@@ -90,6 +111,8 @@ def main(argv=None) -> int:
     p.add_argument("remote")
     p.add_argument("--filter", default=None)
     p.add_argument("--force", action="store_true")
+    p.add_argument("--include-quarantined", action="store_true",
+                   help="ship nodes a test gate quarantined (excluded by default)")
     p = sub.add_parser("pull")
     p.add_argument("remote")
     p.add_argument("--filter", default=None)
@@ -98,6 +121,18 @@ def main(argv=None) -> int:
     p.add_argument("dest")
     p.add_argument("--filter", default=None)
     sub.add_parser("fsck")
+    p = sub.add_parser("diag")
+    p.add_argument("action", choices=["run", "blame", "history", "gate-report"])
+    p.add_argument("node", nargs="?", default=None)
+    p.add_argument("test", nargs="?", default=None)
+    p.add_argument("--pattern", default=None, help="test-name filter")
+    p.add_argument("--match-glob", action="store_true",
+                   help="interpret --pattern as an fnmatch glob (default: regex)")
+    p.add_argument("--jobs", type=int, default=4)
+    p.add_argument("--force", action="store_true",
+                   help="bypass the result ledger (results are re-recorded)")
+    p.add_argument("--builtin", action="store_true",
+                   help="register the builtin param-RMS probe per model type")
 
     args = ap.parse_args(argv)
 
@@ -145,7 +180,10 @@ def main(argv=None) -> int:
         print(f"removed {args.x} (+subtree)")
     elif args.cmd == "test":
         it = bfs(g) if args.node is None else bfs(g, start=args.node)
-        results = g.run_tests(it, re_pattern=args.pattern)
+        pattern, match = ((args.glob_pattern, "glob")
+                          if args.glob_pattern is not None
+                          else (args.pattern, "regex"))
+        results = g.run_tests(it, pattern=pattern, match=match)
         print(json.dumps(results, indent=1) if results else
               "(no registered tests matched — register via the Python API)")
     elif args.cmd == "param":
@@ -194,7 +232,8 @@ def main(argv=None) -> int:
         state = rm.RemoteState(args.repo, name)
         if args.cmd == "push":
             report = rm.push(g, transport, filter=args.filter, state=state,
-                             force=args.force)
+                             force=args.force,
+                             include_quarantined=args.include_quarantined)
         else:
             report = rm.pull(g, transport, filter=args.filter, state=state)
         print(json.dumps(report.to_json(), indent=1))
@@ -209,7 +248,59 @@ def main(argv=None) -> int:
             args.repo).journal_list()
         print(json.dumps(report, indent=1))
         return 0 if report["ok"] else 1
+    elif args.cmd == "diag":
+        from repro import diag
+        runner = diag.DiagnosticsRunner(g, max_workers=args.jobs)
+        if args.builtin:
+            _register_builtin_probes(g)
+        if args.action == "run":
+            nodes = None if args.node is None else [g.nodes[args.node]]
+            if not g.tests:
+                print("(no registered tests — register via the Python API "
+                      "or pass --builtin)")
+                return 1
+            report = runner.run(
+                nodes=nodes, pattern=args.pattern,
+                match="glob" if args.match_glob else "regex",
+                force=args.force)
+            print(json.dumps(report.to_json(), indent=1))
+            return 1 if report.failures() else 0
+        elif args.action == "blame":
+            if not args.node or not args.test:
+                print("usage: diag blame <node> <test>")
+                return 1
+            report = diag.blame(g, args.node, args.test, runner=runner)
+            print(json.dumps(report.to_json(), indent=1))
+            return 0 if report.status == diag.PASS else 1
+        elif args.action == "history":
+            if not args.node:
+                print("usage: diag history <node> [test]")
+                return 1
+            entries = runner.history(args.node, args.test)
+            print(json.dumps(entries, indent=1) if entries else
+                  f"(no recorded results for {args.node!r})")
+        else:  # gate-report
+            print(json.dumps(diag.gate_report(g), indent=1) or "[]")
     return 0
+
+
+def _register_builtin_probes(g: LineageGraph) -> None:
+    """One param-RMS probe per model type in the graph.
+
+    A named module-level function (stable bytecode), so its ledger entries
+    memoize across CLI invocations — the second `diag run --builtin` answers
+    entirely from the store."""
+    for mt in sorted({n.model_type for n in g.nodes.values()}):
+        g.register_test_function(_param_rms, "builtin/param_rms", mt=mt)
+
+
+def _param_rms(model) -> float:
+    total, count = 0.0, 0
+    for key in model.params:
+        v = np.asarray(model.params[key], dtype=np.float64)
+        total += float((v * v).sum())
+        count += v.size
+    return float(np.sqrt(total / max(count, 1)))
 
 
 if __name__ == "__main__":

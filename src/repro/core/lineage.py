@@ -15,6 +15,7 @@ import fnmatch
 import json
 import os
 import re
+import warnings
 from typing import Any, Callable, Dict, Iterable, Iterator, List, Optional, Sequence
 
 from repro.core.artifact import ModelArtifact
@@ -154,6 +155,11 @@ class RegisteredTest:
     fn: Callable[[ModelArtifact], float]
     node_name: Optional[str] = None    # bound to one model…
     model_type: Optional[str] = None   # …or all models of a type
+    # Optional param-key prefix the test exclusively depends on. Declaring a
+    # scope lets the diagnostics runner (DESIGN.md §9.3) key memoized results
+    # by the scoped parameter content: versions whose scoped submodule is
+    # bit-identical share one ledger entry and are never re-tested.
+    scope: Optional[str] = None
 
     def applies_to(self, node: LineageNode) -> bool:
         if self.node_name is not None:
@@ -161,6 +167,29 @@ class RegisteredTest:
         if self.model_type is not None:
             return node.model_type == self.model_type
         return True
+
+
+def compile_test_pattern(pattern: Optional[str], match: str = "regex"
+                         ) -> Callable[[str], bool]:
+    """Build a test-name predicate for ONE explicit matching mode.
+
+    ``match`` is ``"regex"`` (``re.search``), ``"glob"`` (``fnmatch``), or
+    ``"legacy"`` — the deprecated regex-OR-glob union that
+    ``run_tests(re_pattern=...)`` historically applied (a glob like ``acc*``
+    silently matched via fnmatch even when the regex interpretation did
+    not). ``pattern=None`` matches everything."""
+    if pattern is None:
+        return lambda name: True
+    if match == "regex":
+        rx = re.compile(pattern)
+        return lambda name: rx.search(name) is not None
+    if match == "glob":
+        return lambda name: fnmatch.fnmatch(name, pattern)
+    if match == "legacy":
+        rx = re.compile(pattern)
+        return lambda name: (rx.search(name) is not None
+                             or fnmatch.fnmatch(name, pattern))
+    raise ValueError(f"unknown pattern match mode {match!r}")
 
 
 # ---------------------------------------------------------------------------
@@ -367,10 +396,12 @@ class LineageGraph:
     # -- test functions (Table 2) ---------------------------------------------
     def register_test_function(self, t: Callable[[ModelArtifact], float], tn: str,
                                x: Optional[str] = None,
-                               mt: Optional[str] = None) -> None:
+                               mt: Optional[str] = None,
+                               scope: Optional[str] = None) -> None:
         if (x is None) == (mt is None):
             raise ValueError("exactly one of x (node) or mt (model type) must be given")
-        self.tests.append(RegisteredTest(name=tn, fn=t, node_name=x, model_type=mt))
+        self.tests.append(RegisteredTest(name=tn, fn=t, node_name=x,
+                                         model_type=mt, scope=scope))
 
     def deregister_test_function(self, tn: str, x: Optional[str] = None,
                                  mt: Optional[str] = None) -> None:
@@ -406,14 +437,31 @@ class LineageGraph:
                              skip_fn=skip_fn, terminate_fn=terminate_fn)
 
     def run_tests(self, i: Iterable[LineageNode],
-                  re_pattern: Optional[str] = None) -> Dict[str, Dict[str, float]]:
-        """Run all registered tests matching ``re_pattern`` on nodes from ``i``."""
+                  re_pattern: Optional[str] = None,
+                  pattern: Optional[str] = None,
+                  match: str = "regex") -> Dict[str, Dict[str, float]]:
+        """Run registered tests whose name matches ``pattern`` on nodes from ``i``.
+
+        ``pattern``/``match`` select ONE explicit matching mode (``"regex"``
+        or ``"glob"``). ``re_pattern`` is a deprecated shim that keeps the
+        historical regex-OR-glob union behavior; prefer the explicit form.
+        This is the eager serial path — the memoized parallel runner lives in
+        ``repro.diag.runner`` (DESIGN.md §9.1)."""
+        if re_pattern is not None:
+            if pattern is not None:
+                raise ValueError("pass either re_pattern (deprecated) or "
+                                 "pattern=, not both")
+            warnings.warn(
+                "run_tests(re_pattern=...) matches as regex OR glob; pass "
+                "pattern=... with match='regex' or match='glob' instead",
+                DeprecationWarning, stacklevel=2)
+            pattern, match = re_pattern, "legacy"
+        matcher = compile_test_pattern(pattern, match)
         results: Dict[str, Dict[str, float]] = {}
         for node in i:
             node_results: Dict[str, float] = {}
             for t in self.tests_for(node):
-                if re_pattern is not None and not re.search(re_pattern, t.name) \
-                        and not fnmatch.fnmatch(t.name, re_pattern):
+                if not matcher(t.name):
                     continue
                 node_results[t.name] = float(t.fn(node.get_model()))
             if node_results:
@@ -431,9 +479,10 @@ class LineageGraph:
     def run_update_cascade(self, m: str, m_prime: str,
                            skip_fn: Optional[Callable[[LineageNode], bool]] = None,
                            terminate_fn: Optional[Callable[[LineageNode], bool]] = None,
-                           ) -> List[str]:
+                           gate: Optional[Any] = None) -> List[str]:
         from repro.core.cascade import run_update_cascade as _cascade
-        return _cascade(self, m, m_prime, skip_fn=skip_fn, terminate_fn=terminate_fn)
+        return _cascade(self, m, m_prime, skip_fn=skip_fn,
+                        terminate_fn=terminate_fn, gate=gate)
 
     # -- misc -------------------------------------------------------------------
     def __len__(self) -> int:

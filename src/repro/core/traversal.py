@@ -150,13 +150,20 @@ def all_parents_first(graph: LineageGraph, start: Optional[str] = None,
 
 
 def bisect(graph: LineageGraph, start: str,
-           failing: Callable[[LineageNode], bool]) -> Optional[LineageNode]:
+           failing: Callable[[LineageNode], bool],
+           skip_fn: SkipFn = None) -> Optional[LineageNode]:
     """Binary search over a version chain for the FIRST failing version.
 
     Assumes monotonicity (once a version fails, later versions fail) — the
     standard git-bisect contract. Returns None if no version fails.
+    ``skip_fn`` marks versions that cannot be probed (git-bisect-skip):
+    they are excluded from the search entirely, so the result is the first
+    failing *probe-able* version. DAG-wide attribution (classifying a
+    failure as introduced / inherited / merge-emergent rather than finding
+    one chain position) lives in ``repro.diag.blame`` (DESIGN.md §9.2).
     """
-    chain = list(version_chain(graph, start))
+    chain = [n for n in version_chain(graph, start)
+             if skip_fn is None or not skip_fn(n)]
     lo, hi = 0, len(chain) - 1
     if not chain or not failing(chain[hi]):
         return None

@@ -311,6 +311,7 @@ class SyncReport:
     bytes_transferred: int
     chunks_resumed: int = 0
     flattened: Dict[str, str] = dataclasses.field(default_factory=dict)
+    quarantined_skipped: List[str] = dataclasses.field(default_factory=list)
     merge: Optional[LineageMergeReport] = None
     published: bool = True
 
@@ -391,13 +392,20 @@ class _ImportingFetch:
 
 def push(graph: LineageGraph, transport: Transport,
          filter: Optional[str] = None, state: Optional[RemoteState] = None,
-         force: bool = False, chunk_size: int = CHUNK_OBJECTS) -> SyncReport:
+         force: bool = False, chunk_size: int = CHUNK_OBJECTS,
+         include_quarantined: bool = False) -> SyncReport:
     """Ship the (filtered) lineage subgraph to the remote.
 
     Phases: select -> negotiate (closure - remote have) -> journalled
     parallel transfer -> three-way merge into the remote lineage -> atomic
     publish + remote refcount rebuild. A lineage-level conflict aborts before
-    publish (like a non-fast-forward push) unless ``force``."""
+    publish (like a non-fast-forward push) unless ``force``.
+
+    Nodes a test gate quarantined (DESIGN.md §9.4) are excluded from the
+    selection unless ``include_quarantined`` — a regressing model version
+    must not propagate to collaborators by default. Their manifests still
+    ship as storage-only chain dependencies when a pushed descendant's
+    delta chain needs them, so everything sent reconstructs."""
     store = graph.store
     if store is None:
         raise ValueError("push requires a store-backed lineage graph")
@@ -406,6 +414,12 @@ def push(graph: LineageGraph, transport: Transport,
 
     ours_payload = graph.to_payload()
     selected = _select_nodes(ours_payload, filter)
+    quarantined_skipped: List[str] = []
+    if not include_quarantined:
+        from repro.diag.gate import is_quarantined
+        quarantined_skipped = [n["name"] for n in selected
+                               if is_quarantined(n)]
+        selected = [n for n in selected if not is_quarantined(n)]
     refs = [n["artifact_ref"] for n in selected if n.get("artifact_ref")]
     closure = walk_manifests(_local_fetch(store), refs)
 
@@ -453,7 +467,16 @@ def push(graph: LineageGraph, transport: Transport,
     # Roles from the REMOTE's point of view: its document is "ours", the
     # pushed subgraph is "theirs". No artifact auto-merge on push — the
     # remote side cannot be mutated beyond publish (classification only).
-    merged, report = merge_lineage(_scoped(state.load(), filter),
+    # Quarantined nodes are scoped OUT of the merge base exactly like
+    # filtered ones: a node pushed earlier and quarantined since must read
+    # as "not part of this sync", never as a local deletion — otherwise the
+    # push would silently delete it from the remote document.
+    base_payload = _scoped(state.load(), filter)
+    if quarantined_skipped and base_payload is not None:
+        skip = set(quarantined_skipped)
+        base_payload = {"nodes": [n for n in base_payload["nodes"]
+                                  if n["name"] not in skip]}
+    merged, report = merge_lineage(base_payload,
                                    remote_payload, theirs_payload, store=None)
     published = force or report.status != CONFLICT
     if published:
@@ -468,10 +491,15 @@ def push(graph: LineageGraph, transport: Transport,
         # Advance the merge base: drop nodes no longer on the remote, then
         # record as newly common ONLY the pushed nodes the remote accepted
         # verbatim — a node the remote-side merge reshaped is not yet agreed.
+        # Quarantined names never enter the base (they were not synced), so
+        # every later push keeps treating the remote's copy as remote-only
+        # content to preserve rather than a deletion to propagate.
         merged_by_name = {n["name"]: n for n in merged["nodes"]}
+        skip = set(quarantined_skipped)
         old = state.load() or {"nodes": []}
         base_nodes = {n["name"]: n for n in old["nodes"]
-                      if n["name"] in merged_by_name}
+                      if n["name"] in merged_by_name
+                      and n["name"] not in skip}
         for node in selected:
             if merged_by_name.get(node["name"]) == node:
                 base_nodes[node["name"]] = node
@@ -481,7 +509,9 @@ def push(graph: LineageGraph, transport: Transport,
                       selected_nodes=[n["name"] for n in selected],
                       objects_total=plan.total, objects_transferred=moved,
                       bytes_transferred=moved_bytes, chunks_resumed=resumed,
-                      flattened=flattened, merge=report, published=published)
+                      flattened=flattened,
+                      quarantined_skipped=quarantined_skipped,
+                      merge=report, published=published)
 
 
 def pull(graph: LineageGraph, transport: Transport,

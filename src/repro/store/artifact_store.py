@@ -33,6 +33,7 @@ import dataclasses
 import io
 import json
 import os
+import threading
 from collections import OrderedDict
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -83,49 +84,59 @@ class ReconstructionPlan:
 
 
 class TensorCache:
-    """Byte-budget LRU over materialized tensors, keyed by (manifest_ref, key)."""
+    """Byte-budget LRU over materialized tensors, keyed by (manifest_ref, key).
+
+    Mutations are guarded by an RLock: the diagnostics runner (DESIGN.md §9)
+    materializes parameters from a thread pool, and an unguarded
+    ``move_to_end`` racing an eviction corrupts the OrderedDict."""
 
     def __init__(self, budget_bytes: int) -> None:
         self.budget_bytes = budget_bytes
         self._entries: "OrderedDict[Tuple[str, str], np.ndarray]" = OrderedDict()
+        self._lock = threading.RLock()
         self.bytes_used = 0
         self.hits = 0
         self.misses = 0
         self.evictions = 0
 
     def get(self, key: Tuple[str, str]) -> Optional[np.ndarray]:
-        arr = self._entries.get(key)
-        if arr is None:
-            self.misses += 1
-            return None
-        self._entries.move_to_end(key)
-        self.hits += 1
-        return arr
+        with self._lock:
+            arr = self._entries.get(key)
+            if arr is None:
+                self.misses += 1
+                return None
+            self._entries.move_to_end(key)
+            self.hits += 1
+            return arr
 
     def put(self, key: Tuple[str, str], arr: np.ndarray) -> None:
         nbytes = int(arr.nbytes)
         if nbytes > self.budget_bytes:
             return  # larger than the whole budget: never cacheable
-        old = self._entries.pop(key, None)
-        if old is not None:
-            self.bytes_used -= int(old.nbytes)
-        self._entries[key] = arr
-        self.bytes_used += nbytes
-        while self.bytes_used > self.budget_bytes and self._entries:
-            _, evicted = self._entries.popitem(last=False)
-            self.bytes_used -= int(evicted.nbytes)
-            self.evictions += 1
+        with self._lock:
+            old = self._entries.pop(key, None)
+            if old is not None:
+                self.bytes_used -= int(old.nbytes)
+            self._entries[key] = arr
+            self.bytes_used += nbytes
+            while self.bytes_used > self.budget_bytes and self._entries:
+                _, evicted = self._entries.popitem(last=False)
+                self.bytes_used -= int(evicted.nbytes)
+                self.evictions += 1
 
     def contains(self, key: Tuple[str, str]) -> bool:
-        return key in self._entries
+        with self._lock:
+            return key in self._entries
 
     def drop_ref(self, ref: str) -> None:
-        for k in [k for k in self._entries if k[0] == ref]:
-            self.bytes_used -= int(self._entries.pop(k).nbytes)
+        with self._lock:
+            for k in [k for k in self._entries if k[0] == ref]:
+                self.bytes_used -= int(self._entries.pop(k).nbytes)
 
     def clear(self) -> None:
-        self._entries.clear()
-        self.bytes_used = 0
+        with self._lock:
+            self._entries.clear()
+            self.bytes_used = 0
 
     def __len__(self) -> int:
         return len(self._entries)

@@ -38,6 +38,16 @@ from repro.common.hashing import bytes_hash, tensor_hash
 _REC_HEAD = struct.Struct("<HI")  # (keylen, datalen)
 
 
+def ledger_key(test_hash: str, manifest_key: str) -> str:
+    """Key scheme for diagnostics result-ledger entries (DESIGN.md §9.1).
+
+    ``"t_" + bytes_hash(test_hash NUL manifest_key)`` — derived from the
+    *lookup pair*, not the payload, so a memoized runner can probe for a
+    recorded result in O(1) without an index. The payload embeds both
+    components, which is how ``fsck`` re-derives and verifies the key."""
+    return "t_" + bytes_hash(f"{test_hash}\x00{manifest_key}".encode())
+
+
 class CAS:
     def __init__(self, root: Optional[str] = None,
                  pack_threshold: int = 4096,
@@ -122,8 +132,18 @@ class CAS:
                 key = f.read(klen).decode("utf-8", "replace")
                 data_off = pos + _REC_HEAD.size + klen
                 f.seek(dlen, os.SEEK_CUR)
-                if key not in self._pack_index:
-                    self._pack_index[key] = (pack_id, data_off, dlen)
+                # Last-wins: tail records are strictly newer than anything
+                # in the persisted index (they were appended after its last
+                # flush), and within/across tails the scan order is
+                # chronological — so an overwrite-in-place record (ledger
+                # ``t_`` scheme) recovered here must supersede the stale
+                # entry, whose bytes become dead payload. Content-addressed
+                # keys are unaffected (identical bytes either way).
+                old = self._pack_index.get(key)
+                if old is not None:
+                    self._pack_dead[old[0]] = (self._pack_dead.get(old[0], 0)
+                                               + old[2])
+                self._pack_index[key] = (pack_id, data_off, dlen)
                 pos = data_off + dlen
             self._pack_sizes[pack_id] = pos
         if pos < end:
@@ -184,14 +204,40 @@ class CAS:
         self._pack_sizes[pid] = size + len(record)
         self._physical_bytes += len(record)
 
-    def put_bytes(self, data: bytes, key: Optional[str] = None) -> str:
+    def put_bytes(self, data: bytes, key: Optional[str] = None,
+                  overwrite: bool = False) -> str:
+        """Store ``data`` under ``key`` (its content hash by default).
+
+        ``overwrite=True`` replaces an existing object's bytes in place —
+        same key, same refcount, old packed record marked dead for
+        compaction. Only meaningful for the ledger scheme (``t_``), whose
+        keys derive from the lookup pair rather than the payload; content-
+        hashed objects can never legitimately change under their key."""
         key = key or bytes_hash(data)
         with self._lock:
             self.stats["puts"] += 1
             if self.has(key):
-                self.stats["dedup_hits"] += 1
-                self.stats["bytes_deduped"] += len(data)
-                self.refcounts[key] = self.refcounts.get(key, 0) + 1
+                if not overwrite:
+                    self.stats["dedup_hits"] += 1
+                    self.stats["bytes_deduped"] += len(data)
+                    self.refcounts[key] = self.refcounts.get(key, 0) + 1
+                    return key
+                if self.root is None:
+                    old = self._mem.get(key)
+                    if old is not None:
+                        self._physical_bytes -= len(old)
+                    self._mem[key] = data
+                    self._physical_bytes += len(data)
+                elif key in self._pack_index:
+                    pid, _, length = self._pack_index[key]
+                    self._pack_dead[pid] = self._pack_dead.get(pid, 0) + length
+                    self._write_packed(key, data)
+                else:
+                    path = self._obj_path(key)
+                    if os.path.exists(path):
+                        self._physical_bytes -= os.path.getsize(path)
+                    self._write_loose(key, data)
+                self.stats["bytes_written"] += len(data)
                 return key
             if self.root is None:
                 self._mem[key] = data
@@ -384,13 +430,21 @@ class CAS:
     def _verify_key(self, key: str, data: bytes) -> bool:
         """Check ``data`` reproduces its content-address ``key``.
 
-        Three key schemes exist (DESIGN.md §3.2): manifests are
-        ``"m_" + bytes_hash(payload)``; delta blobs and raw objects are
+        Four key schemes exist (DESIGN.md §3.2, §9.1): manifests are
+        ``"m_" + bytes_hash(payload)``; diagnostics ledger entries are
+        ``"t_" + bytes_hash(test_hash NUL manifest_key)`` re-derived from
+        the payload's embedded pair; delta blobs and raw objects are
         ``bytes_hash(data)``; tensors are ``tensor_hash(arr)`` — a hash over
         (shape, dtype, raw bytes), NOT over the serialized npy stream — so
         tensor keys need a decode round-trip to re-derive."""
         if key.startswith("m_"):
             return bytes_hash(data) == key[2:]
+        if key.startswith("t_"):
+            try:
+                obj = json.loads(data)
+                return ledger_key(obj["test_hash"], obj["manifest_key"]) == key
+            except Exception:
+                return False
         if bytes_hash(data) == key:
             return True
         try:

@@ -51,6 +51,44 @@ def test_cli_stats_and_gc(repo, capsys):
     assert "reclaimed" in out
 
 
+def test_cli_diag_run_memoizes_across_invocations(repo, capsys):
+    # cold: executes the builtin probe; warm (separate CLI invocation, new
+    # process-equivalent objects): answers entirely from the ledger
+    assert cli(["-C", repo, "diag", "run", "--builtin"]) == 0
+    cold = json.loads(capsys.readouterr().out)
+    assert cold["executed"] > 0 and cold["memo_hits"] == 0
+    assert cli(["-C", repo, "diag", "run", "--builtin"]) == 0
+    warm = json.loads(capsys.readouterr().out)
+    assert warm["executed"] == 0 and warm["cache_hit_ratio"] == 1.0
+
+
+def test_cli_diag_history_and_gate_report(repo, capsys):
+    cli(["-C", repo, "diag", "run", "--builtin"])
+    capsys.readouterr()
+    assert cli(["-C", repo, "diag", "history", "ft"]) == 0
+    entries = json.loads(capsys.readouterr().out)
+    assert entries and entries[0]["test"] == "builtin/param_rms"
+    assert cli(["-C", repo, "diag", "gate-report"]) == 0
+    assert json.loads(capsys.readouterr().out) == []
+
+
+def test_cli_diag_blame(repo, capsys):
+    assert cli(["-C", repo, "diag", "blame", "ft", "builtin/param_rms",
+                "--builtin"]) == 0
+    report = json.loads(capsys.readouterr().out)
+    assert report["status"] == "pass" and report["frontier"] == []
+
+
+def test_cli_diag_run_without_tests_errors(repo, capsys):
+    assert cli(["-C", repo, "diag", "run"]) == 1
+    assert "no registered tests" in capsys.readouterr().out
+
+
+def test_cli_test_pattern_modes_are_exclusive(repo):
+    with pytest.raises(SystemExit):
+        cli(["-C", repo, "test", "--re", "a", "--glob", "b"])
+
+
 def test_cli_version_edge(repo, capsys):
     g = LineageGraph(path=repo, store=ArtifactStore(root=repo))
     base = g.get_model("base")

@@ -124,6 +124,135 @@ def test_cascade_multi_level(tmp_path):
     assert g.nodes["distilled@v2"].parents == ["task0@v2"]
 
 
+@register_creation_type("test-boom")
+class BoomCr(CreationFunction):
+    """Creation function that fails on demand (exception-safety tests)."""
+
+    def __call__(self, parents):
+        if self.config.get("boom"):
+            raise RuntimeError("creation failed")
+        return finetune_like(parents[0].get_model(), seed=self.config["seed"])
+
+
+def test_cascade_rolls_back_unmaterialized_nodes(tmp_path):
+    g = LineageGraph(path=str(tmp_path))
+    root = make_chain_model(seed=0)
+    g.add_node(root, "mlm")
+    for i, boom in enumerate([False, True, False]):
+        cr = BoomCr(seed=100 + i, boom=boom)
+        g.add_node(finetune_like(root, seed=50 + i), f"task{i}", cr=cr)
+        g.add_edge("mlm", f"task{i}")
+    g.add_node(finetune_like(root, seed=999), "mlm@v2")
+
+    with pytest.raises(RuntimeError, match="creation failed"):
+        run_update_cascade(g, "mlm", "mlm@v2")
+
+    # the raising node's next version (and every other phase-1 empty node)
+    # is gone; edges are detached; nothing dangles
+    assert "task1@v2" not in g.nodes
+    assert "task1@v2" not in g.nodes["task1"].version_children
+    assert "task1@v2" not in g.nodes["mlm@v2"].children
+    for node in g.nodes.values():
+        for ref in node.children + node.version_children + node.parents:
+            assert ref in g.nodes, f"dangling edge {node.name} -> {ref}"
+    # the persisted document matches (no half-built graph was committed)
+    g2 = LineageGraph(path=str(tmp_path))
+    assert set(g2.nodes) == set(g.nodes)
+
+    # materialized siblings survive with their artifacts
+    done = [n for n in ("task0@v2", "task2@v2") if n in g.nodes]
+    for name in done:
+        assert g.nodes[name].artifact is not None
+
+    # re-running after fixing the creation function resumes idempotently
+    g.nodes["task1"].creation_fn = BoomCr(seed=101, boom=False)
+    created = run_update_cascade(g, "mlm", "mlm@v2")
+    assert "task1@v2" in g.nodes
+    assert set(created) | set(done) >= {"task0@v2", "task1@v2", "task2@v2"}
+
+
+def test_cascade_resume_rewires_to_new_parent_versions(tmp_path):
+    """Resuming after a mid-cascade failure must derive the retried child
+    from the parent's NEW version, not the stale one (the idempotence skip
+    still records the old->new mapping)."""
+    g = LineageGraph(path=str(tmp_path))
+    root = make_chain_model(seed=0)
+    g.add_node(root, "mlm")
+    a_cr = BoomCr(seed=1, boom=False)
+    g.add_node(a_cr([g.nodes["mlm"]]), "a", cr=a_cr)
+    g.add_edge("mlm", "a")
+    b_cr = BoomCr(seed=2, boom=True)
+    g.add_node(finetune_like(g.get_model("a"), seed=3), "b", cr=b_cr)
+    g.add_edge("a", "b")
+    g.add_node(finetune_like(root, seed=999), "mlm@v2")
+
+    with pytest.raises(RuntimeError):
+        run_update_cascade(g, "mlm", "mlm@v2")
+    assert "a@v2" in g.nodes and "b@v2" not in g.nodes
+
+    g.nodes["b"].creation_fn = BoomCr(seed=2, boom=False)
+    created = run_update_cascade(g, "mlm", "mlm@v2")
+    assert "b@v2" in created
+    assert g.nodes["b@v2"].parents == ["a@v2"]   # NOT the stale "a"
+    expected = BoomCr(seed=2)([g.nodes["a@v2"]])
+    np.testing.assert_array_equal(g.get_model("b@v2").params["L0/w"],
+                                  expected.params["L0/w"])
+
+
+def test_cascade_rollback_with_store_keeps_store_consistent(tmp_path):
+    from repro.store import ArtifactStore
+    g = LineageGraph(path=str(tmp_path), store=ArtifactStore(root=str(tmp_path)))
+    root = make_chain_model(seed=0)
+    g.add_node(root, "mlm")
+    g.add_node(finetune_like(root, seed=50), "task0", cr=BoomCr(seed=1, boom=True))
+    g.add_edge("mlm", "task0")
+    g.add_node(finetune_like(root, seed=999), "mlm@v2")
+    with pytest.raises(RuntimeError):
+        run_update_cascade(g, "mlm", "mlm@v2")
+    assert "task0@v2" not in g.nodes
+    roots = [n.artifact_ref for n in g.nodes.values() if n.artifact_ref]
+    assert g.store.fsck(roots)["ok"]
+
+
+def test_cascade_gate_quarantines_regressions(tmp_path):
+    """End-to-end: gated cascade quarantines the regressing rebuild but
+    keeps the version edge + artifact (DESIGN.md §9.4)."""
+    from repro.diag import TestGate, gate_report, is_quarantined
+
+    @register_creation_type("test-regress")
+    class RegressCr(CreationFunction):
+        def __call__(self, parents):
+            m = finetune_like(parents[0].get_model(), seed=self.config["seed"])
+            if self.config.get("regress"):
+                m.metadata["broken"] = True
+            return m
+
+    def flag_test(model):
+        return float("nan") if model.metadata.get("broken") else 1.0
+
+    g = LineageGraph(path=str(tmp_path))
+    root = make_chain_model(seed=0)
+    g.add_node(root, "mlm")
+    for i, regress in enumerate([False, True]):
+        # the ORIGINAL task models are clean; only the regressing creation
+        # function poisons its rebuild (a true new failure, not inherited)
+        cr = RegressCr(seed=100 + i, regress=regress)
+        g.add_node(finetune_like(root, seed=50 + i), f"task{i}", cr=cr)
+        g.add_edge("mlm", f"task{i}")
+    g.register_test_function(flag_test, "probe/flag", mt="toy")
+    g.add_node(finetune_like(root, seed=999), "mlm@v2")
+
+    gate = TestGate(graph=g)
+    created = run_update_cascade(g, "mlm", "mlm@v2", gate=gate)
+    assert sorted(created) == ["task0@v2", "task1@v2"]
+    assert not is_quarantined(g.nodes["task0@v2"])
+    assert is_quarantined(g.nodes["task1@v2"])
+    assert g.nodes["task1"].version_children == ["task1@v2"]   # edge kept
+    assert g.nodes["task1@v2"].artifact is not None            # model kept
+    assert [r["node"] for r in gate_report(g)] == ["task1@v2"]
+    assert len(gate.decisions) == 2
+
+
 def test_cascade_mtl_group(tmp_path):
     g = LineageGraph(path=str(tmp_path))
     root = make_chain_model(seed=0)

@@ -78,11 +78,32 @@ def test_skip_and_terminate(graph):
 def test_run_tests_with_regex(graph):
     graph.register_test_function(l2_test, "probe/l2", mt="toy")
     graph.register_test_function(lambda m: 1.0, "other", mt="toy")
-    results = graph.run_tests(bfs(graph), re_pattern="probe.*")
+    results = graph.run_tests(bfs(graph), pattern="probe.*", match="regex")
     assert set(results) == set(graph.nodes)
     assert all(set(v) == {"probe/l2"} for v in results.values())
     graph.deregister_test_function("probe/l2", mt="toy")
     assert all(t.name != "probe/l2" for t in graph.tests)
+
+
+def test_run_tests_pattern_modes_are_explicit(graph):
+    """Regex and glob are distinct modes — "l2*" as a glob anchors both
+    ends and misses "acc/l2"; as a regex, re.search finds it."""
+    graph.register_test_function(lambda m: 1.0, "acc/l2", mt="toy")
+    assert graph.run_tests(bfs(graph), pattern="l2*", match="regex")
+    assert not graph.run_tests(bfs(graph), pattern="l2*", match="glob")
+    assert graph.run_tests(bfs(graph), pattern="acc*", match="glob")
+    with pytest.raises(ValueError):
+        graph.run_tests(bfs(graph), pattern="x", match="bogus")
+
+
+def test_run_tests_re_pattern_deprecation_shim(graph):
+    """The legacy kwarg warns but keeps the old regex-OR-glob union."""
+    graph.register_test_function(lambda m: 1.0, "acc/l2", mt="toy")
+    with pytest.warns(DeprecationWarning):
+        legacy = graph.run_tests(bfs(graph), re_pattern="acc*")
+    assert legacy  # matched via the glob half of the union
+    with pytest.raises(ValueError):
+        graph.run_tests(bfs(graph), re_pattern="a", pattern="b")
 
 
 def test_run_function(graph):
@@ -114,3 +135,62 @@ def test_bisect_finds_first_failing(graph):
 
 def test_bisect_no_failure(graph):
     assert bisect(graph, "child0", lambda n: False) is None
+
+
+def _make_versions(graph, n, first_bad):
+    prev = "child0"
+    for v in range(2, n + 1):
+        m = finetune_like(graph.get_model(prev), seed=v)
+        m.metadata["broken"] = v >= first_bad
+        name = f"child0@v{v}"
+        graph.add_node(m, name)
+        graph.add_version_edge(prev, name)
+        prev = name
+
+
+def _broken(node):
+    return bool(node.get_model().metadata.get("broken"))
+
+
+def test_bisect_single_node_chain(graph):
+    # no version edges at all: a one-element chain
+    assert bisect(graph, "child1", lambda n: False) is None
+    assert bisect(graph, "child1", lambda n: True).name == "child1"
+
+
+def test_bisect_all_versions_passing(graph):
+    _make_versions(graph, n=6, first_bad=99)
+    assert bisect(graph, "child0", _broken) is None
+
+
+def test_bisect_failure_at_chain_head(graph):
+    _make_versions(graph, n=6, first_bad=0)   # every version broken
+    graph.get_model("child0").metadata["broken"] = True
+    assert bisect(graph, "child0", _broken).name == "child0"
+
+
+def test_bisect_skip_fn_excludes_unprobeable_versions(graph):
+    _make_versions(graph, n=8, first_bad=5)
+    # the true first-bad version cannot be probed: the search lands on the
+    # first failing version that CAN be (git-bisect-skip semantics)
+    found = bisect(graph, "child0", _broken,
+                   skip_fn=lambda n: n.name == "child0@v5")
+    assert found.name == "child0@v6"
+    # skipping passing versions must not change the answer
+    found = bisect(graph, "child0", _broken,
+                   skip_fn=lambda n: n.name in ("child0@v2", "child0@v3"))
+    assert found.name == "child0@v5"
+    # probes never land on skipped nodes
+    probed = []
+
+    def failing(node):
+        probed.append(node.name)
+        return _broken(node)
+
+    bisect(graph, "child0", failing, skip_fn=lambda n: n.name == "child0@v4")
+    assert "child0@v4" not in probed
+
+
+def test_bisect_skip_everything(graph):
+    _make_versions(graph, n=4, first_bad=2)
+    assert bisect(graph, "child0", _broken, skip_fn=lambda n: True) is None

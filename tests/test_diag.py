@@ -1,0 +1,444 @@
+"""Diagnostics engine (paper §4; DESIGN.md §9): memoized runner, result
+ledger round-trips, blame attribution, test transfer, gate + quarantine."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import LineageGraph
+from repro.diag import (DiagnosticsRunner, TestGate, blame, gate_report,
+                        is_quarantined, release_node, scoped_content_key,
+                        transferable_tests)
+from repro.diag import test_identity_hash as identity_hash_of
+from repro.store import ArtifactStore
+from repro.store.cas import ledger_key
+
+from helpers import finetune_like, l2_test, make_chain_model
+
+
+def broken_flag_test(model) -> float:
+    """Metadata-driven verdict (round-trips storage bit-exactly, unlike a
+    NaN poison, which delta quantization can smooth away)."""
+    return float("nan") if model.metadata.get("broken") else 1.0
+
+
+@pytest.fixture
+def chain_repo(tmp_path):
+    """3-level provenance chain base -> mid -> leaf, store-backed."""
+    g = LineageGraph(path=str(tmp_path), store=ArtifactStore(root=str(tmp_path)))
+    base = make_chain_model(seed=0)
+    g.add_node(base, "base")
+    g.add_edge("base", "mid")
+    g.add_node(finetune_like(base, seed=1), "mid")
+    g.add_edge("mid", "leaf")
+    g.add_node(finetune_like(g.get_model("mid"), seed=2), "leaf")
+    g.register_test_function(l2_test, "probe/l2", mt="toy")
+    return g
+
+
+# ---------------------------------------------------------------------------
+# Memoized runner + ledger
+# ---------------------------------------------------------------------------
+
+
+def test_cold_run_executes_then_memoizes(chain_repo):
+    g = chain_repo
+    cold = DiagnosticsRunner(g).run()
+    assert cold.executed == 3 and cold.memo_hits == 0
+    assert set(cold.values()) == {"base", "mid", "leaf"}
+    warm = DiagnosticsRunner(g).run()   # fresh runner: hits from the store
+    assert warm.executed == 0 and warm.memo_hits == 3
+    assert warm.cache_hit_ratio == 1.0
+    assert cold.values() == warm.values()
+
+
+def test_memo_hit_performs_zero_materializations(chain_repo):
+    """Acceptance: re-testing an unchanged model touches no tensor data."""
+    g = chain_repo
+    DiagnosticsRunner(g).run()
+    g.store.reset_io_stats()
+    g.store.cache.clear()               # even a cold tensor cache stays cold
+    report = DiagnosticsRunner(g).run()
+    assert report.executed == 0
+    assert g.store.io_stats["tensors_materialized"] == 0
+    assert g.store.io_stats["plans_resolved"] == 0
+
+
+def test_ledger_round_trips_through_store(chain_repo, tmp_path):
+    """Acceptance: results persist in the CAS and survive a full reopen."""
+    g = chain_repo
+    first = DiagnosticsRunner(g).run()
+    # a fresh graph + store object: only disk state is shared
+    g2 = LineageGraph(path=str(tmp_path), store=ArtifactStore(root=str(tmp_path)))
+    g2.register_test_function(l2_test, "probe/l2", mt="toy")
+    g2.store.reset_io_stats()
+    again = DiagnosticsRunner(g2).run()
+    assert again.executed == 0 and again.memo_hits == 3
+    assert g2.store.io_stats["tensors_materialized"] == 0
+    assert again.values() == first.values()
+
+
+def test_ledger_entries_survive_fsck(chain_repo):
+    g = chain_repo
+    DiagnosticsRunner(g).run()
+    roots = [n.artifact_ref for n in g.nodes.values() if n.artifact_ref]
+    report = g.store.fsck(roots)
+    assert report["ok"], report
+    t_keys = [k for k in g.store.cas.keys() if k.startswith("t_")]
+    assert len(t_keys) == 3
+
+
+def test_changing_the_test_invalidates_results(chain_repo):
+    g = chain_repo
+    DiagnosticsRunner(g).run()
+
+    def l2_shifted(model):
+        return l2_test(model) + 1.0
+
+    g.tests[0].fn = l2_shifted          # same name, different behavior
+    rerun = DiagnosticsRunner(g).run()
+    assert rerun.executed == 3 and rerun.memo_hits == 0
+
+
+def test_failures_are_memoized_too(chain_repo):
+    g = chain_repo
+
+    def boom(model):
+        raise RuntimeError("bad probe")
+
+    g.register_test_function(boom, "probe/boom", mt="toy")
+    r1 = DiagnosticsRunner(g).run(pattern="boom")
+    fails = r1.failures()
+    assert len(fails) == 3 and all("bad probe" in f.error for f in fails)
+    r2 = DiagnosticsRunner(g).run(pattern="boom")
+    assert r2.executed == 0 and all(not f.passed for f in r2.failures())
+
+
+def test_run_pattern_modes(chain_repo):
+    g = chain_repo
+    g.register_test_function(lambda m: 1.0, "acc/top1", mt="toy")
+    glob_hits = DiagnosticsRunner(g).run(pattern="acc*", match="glob")
+    assert all(set(v) == {"acc/top1"} for v in glob_hits.results.values())
+    rx_hits = DiagnosticsRunner(g).run(pattern=r"probe/.*")
+    assert all(set(v) == {"probe/l2"} for v in rx_hits.results.values())
+
+
+def test_ledger_key_scheme_is_deterministic(chain_repo):
+    g = chain_repo
+    t = g.tests[0]
+    th = identity_hash_of(t)
+    node = g.nodes["base"]
+    key = ledger_key(th, node.artifact_ref)
+    DiagnosticsRunner(g).run()
+    assert g.store.cas.has(key)
+    record = json.loads(g.store.cas.get_bytes(key))
+    assert record["node"] == "base" and record["passed"] is True
+
+
+# ---------------------------------------------------------------------------
+# Blame (DAG-wide regression attribution)
+# ---------------------------------------------------------------------------
+
+
+def _poisoned_repo(tmp_path, poison_at: str):
+    """base -> mid -> leaf with metadata 'broken' injected at one level
+    (inherited by derivation, like a real upstream bug)."""
+    g = LineageGraph(path=str(tmp_path), store=ArtifactStore(root=str(tmp_path)))
+    base = make_chain_model(seed=0)
+    if poison_at == "base":
+        base.metadata["broken"] = True
+    g.add_node(base, "base")
+    mid = finetune_like(base, seed=1)
+    mid.metadata.update(base.metadata)
+    if poison_at == "mid":
+        mid.metadata["broken"] = True
+    g.add_edge("base", "mid")
+    g.add_node(mid, "mid")
+    leaf = finetune_like(mid, seed=2)
+    leaf.metadata.update(mid.metadata)
+    g.add_edge("mid", "leaf")
+    g.add_node(leaf, "leaf")
+    g.register_test_function(broken_flag_test, "probe/flag", mt="toy")
+    return g
+
+
+def test_blame_attributes_upstream_regression_as_inherited(tmp_path):
+    """Acceptance: injected upstream regression -> introduced at the
+    ancestor, inherited in ALL descendants."""
+    g = _poisoned_repo(tmp_path, poison_at="base")
+    report = blame(g, "leaf", "probe/flag")
+    assert report.entries["base"].status == "introduced"
+    assert report.entries["mid"].status == "inherited"
+    assert report.entries["mid"].inherited_from == ["base"]
+    assert report.entries["leaf"].status == "inherited"
+    assert report.entries["leaf"].inherited_from == ["mid"]
+    assert report.frontier == ["base"]
+    # blame of the middle node agrees
+    assert blame(g, "mid", "probe/flag").entries["mid"].status == "inherited"
+
+
+def test_blame_mid_chain_introduction(tmp_path):
+    g = _poisoned_repo(tmp_path, poison_at="mid")
+    report = blame(g, "leaf", "probe/flag")
+    assert report.entries["base"].status == "pass"
+    assert report.entries["mid"].status == "introduced"
+    assert report.entries["leaf"].status == "inherited"
+    assert report.frontier == ["mid"]
+
+
+def test_blame_emergent_from_merge(tmp_path):
+    g = LineageGraph(path=str(tmp_path), store=ArtifactStore(root=str(tmp_path)))
+    p1 = make_chain_model(seed=3)
+    p2 = finetune_like(p1, seed=4)
+    g.add_node(p1, "p1")
+    g.add_node(p2, "p2")
+    merged = finetune_like(p1, seed=5)
+    merged.metadata["broken"] = True    # the combination is at fault
+    g.add_node(merged, "merged")
+    g.add_edge("p1", "merged")
+    g.add_edge("p2", "merged")
+    g.register_test_function(broken_flag_test, "probe/flag", mt="toy")
+    report = blame(g, "merged", "probe/flag")
+    assert report.entries["merged"].status == "emergent"
+    assert report.frontier == ["merged"]
+
+
+def test_blame_walks_version_edges(tmp_path):
+    g = _poisoned_repo(tmp_path, poison_at="base")
+    v2 = finetune_like(g.get_model("leaf"), seed=9)
+    v2.metadata["broken"] = True
+    g.add_node(v2, "leaf@v2")
+    g.add_version_edge("leaf", "leaf@v2")
+    report = blame(g, "leaf@v2", "probe/flag")
+    assert report.entries["leaf@v2"].status == "inherited"
+    assert "leaf" in report.entries["leaf@v2"].inherited_from
+    assert report.frontier == ["base"]
+
+
+def test_blame_is_memoized(chain_repo):
+    g = chain_repo
+    runner = DiagnosticsRunner(g)
+    runner.run()
+    executed_before = runner.stats["executed"]
+    report = blame(g, "leaf", "probe/l2", runner=runner)
+    assert runner.stats["executed"] == executed_before  # zero new executions
+    assert report.status == "pass"
+
+
+# ---------------------------------------------------------------------------
+# Diff-adapted transfer + scoped skipping
+# ---------------------------------------------------------------------------
+
+
+def test_scoped_test_skips_rerun_when_submodule_unchanged(tmp_path):
+    g = LineageGraph(path=str(tmp_path), store=ArtifactStore(root=str(tmp_path)))
+    base = make_chain_model(seed=0)
+    g.add_node(base, "m@v1")
+    # trunk-only update built FROM THE STORED truth: head bits unchanged
+    stored = g.store.load_artifact(g.nodes["m@v1"].artifact_ref, lazy=False)
+    v2 = finetune_like(stored, seed=1).replace_params(
+        {"head/w": stored.params["head/w"]})
+    g.add_node(v2, "m@v2")
+    g.add_version_edge("m@v1", "m@v2")
+
+    assert scoped_content_key(g.nodes["m@v1"], "head") == \
+        scoped_content_key(g.nodes["m@v2"], "head")
+    # boundary safety: "hea" is not a layer-path prefix of "head/w"
+    assert scoped_content_key(g.nodes["m@v1"], "hea") is None
+
+    g.register_test_function(
+        lambda m: float(np.linalg.norm(np.asarray(m.params["head/w"]))),
+        "probe/head", mt="toy", scope="head")
+    report = DiagnosticsRunner(g).run()
+    assert report.executed == 1 and report.memo_hits == 1  # one shared entry
+    vals = report.values()
+    assert vals["m@v1"]["probe/head"] == vals["m@v2"]["probe/head"]
+
+
+def test_structural_transfer_runs_type_bound_test_on_matching_derivative(tmp_path):
+    g = LineageGraph(path=str(tmp_path), store=ArtifactStore(root=str(tmp_path)))
+    a = make_chain_model(seed=0, model_type="typeA")
+    b = finetune_like(a, seed=1)
+    b.model_type = "typeB"              # same structure, different family tag
+    g.add_node(a, "a")
+    g.add_node(b, "b", model_type="typeB")
+    g.register_test_function(l2_test, "probe/l2", mt="typeA")
+
+    assert [t.name for t in transferable_tests(g, g.nodes["b"])] == ["probe/l2"]
+
+    plain = DiagnosticsRunner(g).run()
+    assert set(plain.results) == {"a"}  # no transfer: typeB not covered
+    xfer = DiagnosticsRunner(g, transfer=True).run()
+    assert set(xfer.results) == {"a", "b"}
+    assert xfer.results["b"]["probe/l2"].transferred
+
+
+def test_structural_transfer_rejects_different_architecture(tmp_path):
+    g = LineageGraph(path=str(tmp_path))
+    a = make_chain_model(seed=0, n_layers=4, model_type="typeA")
+    c = make_chain_model(seed=2, n_layers=2, model_type="typeC")
+    g.add_node(a, "a")
+    g.add_node(c, "c", model_type="typeC")
+    g.register_test_function(l2_test, "probe/l2", mt="typeA")
+    assert transferable_tests(g, g.nodes["c"]) == []
+
+
+# ---------------------------------------------------------------------------
+# Gate + quarantine
+# ---------------------------------------------------------------------------
+
+
+def test_gate_quarantines_new_failure_and_report_lists_it(tmp_path):
+    g = LineageGraph(path=str(tmp_path), store=ArtifactStore(root=str(tmp_path)))
+    m1 = make_chain_model(seed=0)
+    g.add_node(m1, "m@v1")
+    bad = finetune_like(m1, seed=1)
+    bad.metadata["broken"] = True
+    g.add_node(bad, "m@v2")
+    g.add_version_edge("m@v1", "m@v2")
+    g.register_test_function(broken_flag_test, "probe/flag", mt="toy")
+
+    gate = TestGate(graph=g)
+    decision = gate.apply("m@v2")
+    assert not decision.passed and decision.quarantined
+    assert decision.regressions[0].kind == "new_failure"
+    assert is_quarantined(g.nodes["m@v2"])
+    assert g.nodes["m@v2"].artifact_ref is not None          # artifact kept
+    assert g.nodes["m@v1"].version_children == ["m@v2"]      # edge kept
+    report = gate_report(g)
+    assert [r["node"] for r in report] == ["m@v2"]
+
+    release_node(g, "m@v2")
+    assert not is_quarantined(g.nodes["m@v2"]) and gate_report(g) == []
+
+
+def test_gate_metric_drop_and_tolerance(tmp_path):
+    g = LineageGraph(path=str(tmp_path))
+    m1 = make_chain_model(seed=0)
+    m1.metadata["score"] = 0.9
+    g.add_node(m1, "m@v1")
+    m2 = finetune_like(m1, seed=1)
+    m2.metadata["score"] = 0.85
+    g.add_node(m2, "m@v2")
+    g.add_version_edge("m@v1", "m@v2")
+    g.register_test_function(lambda m: float(m.metadata["score"]),
+                             "probe/score", mt="toy")
+
+    strict = TestGate(graph=g, tol=0.0, quarantine=False)
+    assert not strict.check("m@v2").passed
+    assert strict.check("m@v2").regressions[0].kind == "metric_drop"
+    lenient = TestGate(graph=g, tol=0.1, quarantine=False)
+    assert lenient.check("m@v2").passed
+
+
+def test_gate_inherited_failure_is_not_a_regression(tmp_path):
+    g = LineageGraph(path=str(tmp_path))
+    m1 = make_chain_model(seed=0)
+    m1.metadata["broken"] = True
+    g.add_node(m1, "m@v1")
+    m2 = finetune_like(m1, seed=1)
+    m2.metadata["broken"] = True        # still failing, but no worse
+    g.add_node(m2, "m@v2")
+    g.add_version_edge("m@v1", "m@v2")
+    g.register_test_function(broken_flag_test, "probe/flag", mt="toy")
+    assert TestGate(graph=g).check("m@v2").passed
+
+
+def test_push_excludes_quarantined_nodes(tmp_path):
+    from repro import remote as rm
+    src = tmp_path / "src"
+    g = LineageGraph(path=str(src), store=ArtifactStore(root=str(src)))
+    base = make_chain_model(seed=0)
+    g.add_node(base, "good")
+    bad = finetune_like(base, seed=1)
+    g.add_edge("good", "bad")
+    g.add_node(bad, "bad")
+    from repro.diag import quarantine_node
+    quarantine_node(g, "bad", reason="manual")
+
+    remote_dir = str(tmp_path / "remote")
+    report = rm.push(g, rm.LocalTransport(remote_dir))
+    assert report.quarantined_skipped == ["bad"]
+    assert "bad" not in report.selected_nodes
+
+    dest = str(tmp_path / "clone")
+    rm.clone(remote_dir, dest)
+    g2 = LineageGraph(path=dest, store=ArtifactStore(root=dest))
+    assert "good" in g2.nodes and "bad" not in g2.nodes
+    assert g2.store.fsck([n.artifact_ref for n in g2.nodes.values()
+                          if n.artifact_ref])["ok"]
+
+    report2 = rm.push(g, rm.LocalTransport(remote_dir),
+                      include_quarantined=True)
+    assert report2.quarantined_skipped == []
+    assert "bad" in report2.selected_nodes
+
+
+def test_quarantine_after_push_does_not_delete_from_remote(tmp_path):
+    """A node pushed earlier then quarantined must read as out-of-scope on
+    the next push, NOT as a local deletion of the remote's copy."""
+    from repro import remote as rm
+    from repro.diag import quarantine_node
+    src = str(tmp_path / "src")
+    g = LineageGraph(path=src, store=ArtifactStore(root=src))
+    base = make_chain_model(seed=0)
+    g.add_node(base, "good")
+    g.add_edge("good", "bad")
+    g.add_node(finetune_like(base, seed=1), "bad")
+
+    remote_dir = str(tmp_path / "remote")
+    transport = rm.LocalTransport(remote_dir)
+    state = rm.RemoteState(src, "origin")
+    rm.remote_add(src, "origin", remote_dir)
+    first = rm.push(g, transport, state=state)
+    assert set(first.selected_nodes) == {"good", "bad"}
+
+    quarantine_node(g, "bad", reason="regression found post-push")
+    second = rm.push(g, transport, state=state)
+    assert second.quarantined_skipped == ["bad"]
+    remote_nodes = {n["name"] for n in transport.fetch_lineage()["nodes"]}
+    assert remote_nodes == {"good", "bad"}  # remote copy preserved
+    # and a third push (base advanced) still preserves it
+    third = rm.push(g, transport, state=state)
+    assert {n["name"] for n in transport.fetch_lineage()["nodes"]} \
+        == {"good", "bad"}
+    assert third.published
+
+
+def test_identity_hash_stable_across_recompilation():
+    """Functions containing comprehensions/lambdas must hash identically
+    when the same source is compiled twice (simulating a process restart) —
+    repr of nested code objects embeds memory addresses."""
+    from repro.core.lineage import RegisteredTest
+    src = ("def probe(m):\n"
+           "    return sum(v for v in [1.0, 2.0]) + (lambda x: x)(0.0)\n")
+    ns1, ns2 = {}, {}
+    exec(src, ns1)
+    exec(src, ns2)
+    h1 = identity_hash_of(RegisteredTest(name="p", fn=ns1["probe"]))
+    h2 = identity_hash_of(RegisteredTest(name="p", fn=ns2["probe"]))
+    assert ns1["probe"].__code__ is not ns2["probe"].__code__
+    assert h1 == h2
+
+
+def test_force_rerun_re_records_the_ledger(tmp_path):
+    """--force semantics: a forced execution supersedes the stored entry,
+    so later plain runs (fresh processes) see the new value."""
+    g = LineageGraph(path=str(tmp_path), store=ArtifactStore(root=str(tmp_path)))
+    g.add_node(make_chain_model(seed=0), "m")
+    state = {"v": 1.0}
+    g.register_test_function(lambda m: state["v"], "probe/ambient", mt="toy")
+    first = DiagnosticsRunner(g).run()
+    assert first.values()["m"]["probe/ambient"] == 1.0
+    state["v"] = 2.0    # ambient change: same test hash, new behavior
+    forced = DiagnosticsRunner(g).run(force=True)
+    assert forced.values()["m"]["probe/ambient"] == 2.0
+    # a completely fresh graph+store sees the superseded record
+    g2 = LineageGraph(path=str(tmp_path), store=ArtifactStore(root=str(tmp_path)))
+    g2.register_test_function(lambda m: state["v"], "probe/ambient", mt="toy")
+    again = DiagnosticsRunner(g2).run()
+    assert again.executed == 0
+    assert again.values()["m"]["probe/ambient"] == 2.0
+    roots = [n.artifact_ref for n in g2.nodes.values() if n.artifact_ref]
+    assert g2.store.fsck(roots)["ok"]

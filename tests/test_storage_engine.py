@@ -307,3 +307,32 @@ def test_release_full_lifecycle(tmp_path):
         store.release(r)
     store.gc()
     assert store.cas.object_count() < n_before
+
+
+def test_overwrite_in_place_and_crash_recovery(tmp_path):
+    """Ledger-scheme overwrite (diag --force, DESIGN.md §9.1): the newer
+    record must win both live and after a crash that lost the index flush —
+    the pack tail scan is last-wins, with the stale bytes marked dead."""
+    cas = CAS(str(tmp_path), pack_threshold=1024)
+    cas.put_bytes(b'{"v": 1}', key="t_demo")
+    cas.flush()
+    cas.put_bytes(b'{"v": 2}', key="t_demo", overwrite=True)
+    assert cas.get_bytes("t_demo") == b'{"v": 2}'
+    assert cas.refcounts["t_demo"] == 1          # identity, not a new ref
+    assert cas.object_count() == 1
+
+    # crash before the post-overwrite flush: reopen recovers the NEW value
+    cas2 = CAS(str(tmp_path), pack_threshold=1024)
+    assert cas2.get_bytes("t_demo") == b'{"v": 2}'
+    assert sum(cas2._pack_dead.values()) > 0     # stale record is dead bytes
+
+    # loose-object overwrite path (above the pack threshold)
+    big1, big2 = b"a" * 2048, b"b" * 2048
+    cas2.put_bytes(big1, key="t_big")
+    cas2.put_bytes(big2, key="t_big", overwrite=True)
+    assert cas2.get_bytes("t_big") == big2
+    before = cas2.physical_bytes()
+    assert before == sum(
+        os.path.getsize(os.path.join(str(tmp_path), "objects", f))
+        for f in os.listdir(os.path.join(str(tmp_path), "objects"))
+        if not f.endswith(".tmp")) + sum(cas2._pack_sizes.values())

@@ -87,7 +87,7 @@ def test_traversal_testing_real_models(system):
         return float(jnp.mean(logits))
 
     g.register_test_function(lambda m: 1.0, "alive", mt=cfg.name)
-    results = g.run_tests(bfs(g), re_pattern="alive")
+    results = g.run_tests(bfs(g), pattern="alive", match="regex")
     assert set(results) == {"base", "task0", "task1"}
 
 
