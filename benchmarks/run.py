@@ -1,11 +1,15 @@
 """Benchmark harness entry: one function per paper table/figure.
 
 Prints a ``name,us_per_call,derived`` CSV summary line per benchmark plus
-each benchmark's own table. Usage: PYTHONPATH=src python -m benchmarks.run
+each benchmark's own table, and writes ``BENCH_PR4.json`` — the machine-
+readable perf trajectory (commit throughput, warm/cold checkout latency,
+dedup ratio) that CI and future PRs diff against.
+Usage: PYTHONPATH=src python -m benchmarks.run
 """
 
 from __future__ import annotations
 
+import json
 import sys
 import time
 
@@ -29,6 +33,34 @@ def main() -> None:
     best = max(lzma_rows, key=lambda r: r["ratio"])
     _csv("table4_compression", (time.perf_counter() - t0) * 1e6 / max(len(rows), 1),
          f"best_ratio={best['ratio']:.2f}@{best['graph']}")
+    pipe = next(r for r in rows if r["technique"] == "pipeline")
+    _csv("pipeline", pipe["pip_commit_s"] * 1e6 / pipe["n_nodes"],
+         f"commit_x={pipe['commit_speedup']:.2f},"
+         f"checkout_x={pipe['checkout_speedup']:.2f},"
+         f"models_per_s={pipe['commit_models_per_s']:.1f}")
+    with open("BENCH_PR4.json", "w") as f:
+        json.dump({
+            "pool": {"n_nodes": pipe["n_nodes"], "d": pipe["d"]},
+            "commit": {
+                "serial_s": pipe["seq_commit_s"],
+                "pipelined_s": pipe["pip_commit_s"],
+                "speedup": pipe["commit_speedup"],
+                "models_per_s": pipe["commit_models_per_s"],
+            },
+            "checkout": {
+                "warm_serial_s": pipe["seq_warm_checkout_s"],
+                "warm_batched_s": pipe["pip_warm_checkout_s"],
+                "warm_speedup": pipe["checkout_speedup"],
+                "cold_serial_s": pipe["seq_cold_checkout_s"],
+                "cold_batched_s": pipe["pip_cold_checkout_s"],
+                "cold_speedup": pipe["cold_checkout_speedup"],
+            },
+            "dedup_ratio": {"serial": pipe["seq_ratio"],
+                            "pipelined": pipe["pip_ratio"]},
+            "fold": {"depth5_chain_hops": pipe["fold_chain_hops"],
+                     "dequants": 1},
+        }, f, indent=1)
+    print("wrote BENCH_PR4.json")
 
     print("=" * 72)
     print("Figure 3 — auto-insertion scaling")

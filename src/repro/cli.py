@@ -14,9 +14,18 @@ Commands (analogous to git's CLI, per the paper):
                                 (one explicit pattern mode, regex or glob)
     param <node> <key>          materialize ONE parameter (lazy checkout):
                                 prints its reconstruction plan + summary stats
+    checkout <node>             batched full-model materialization through
+                                the chain-folding engine (DESIGN.md §10):
+                                prints per-param chain stats (hops decoded,
+                                dequants applied, folds, zero-copy reads)
     stats                       storage statistics (ratio, dedup, objects,
-                                packfiles, tensor cache)
+                                packfiles, tensor + fold caches)
     gc                          collect unreferenced objects
+
+Global storage knobs:
+    --lzma-preset N             LZMA preset for newly committed delta blobs
+                                (0 fastest ... 9 strongest; default 0 — see
+                                bench_compression's preset sweep)
 
 Collaboration commands (paper §5; DESIGN.md §8):
     remote add <name> <url>     register a peer repository (url = directory)
@@ -65,14 +74,19 @@ from repro.core import LineageGraph, bfs, module_diff
 from repro.store import ArtifactStore
 
 
-def _graph(repo: str) -> LineageGraph:
-    return LineageGraph(path=repo, store=ArtifactStore(root=repo))
+def _graph(repo: str, lzma_preset=None) -> LineageGraph:
+    return LineageGraph(path=repo,
+                        store=ArtifactStore(root=repo,
+                                            lzma_preset=lzma_preset))
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="mgit", description=__doc__,
                                  formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("-C", dest="repo", default=".", help="lineage repo directory")
+    ap.add_argument("--lzma-preset", dest="lzma_preset", type=int,
+                    default=None, metavar="N",
+                    help="LZMA preset for new delta blobs (0..9; default 0)")
     sub = ap.add_subparsers(dest="cmd", required=True)
 
     sub.add_parser("log")
@@ -101,6 +115,10 @@ def main(argv=None) -> int:
     p = sub.add_parser("param")
     p.add_argument("node")
     p.add_argument("key")
+    p = sub.add_parser("checkout")
+    p.add_argument("node")
+    p.add_argument("--jobs", type=int, default=None,
+                   help="decode worker threads (default: store io_workers)")
     sub.add_parser("stats")
     sub.add_parser("gc")
     p = sub.add_parser("remote")
@@ -133,6 +151,9 @@ def main(argv=None) -> int:
                    help="bypass the result ledger (results are re-recorded)")
     p.add_argument("--builtin", action="store_true",
                    help="register the builtin param-RMS probe per model type")
+    p.add_argument("--prefetch", action="store_true",
+                   help="batch-materialize each model before its tests run "
+                        "(chain-folded, threaded checkout; DESIGN.md §10.3)")
 
     args = ap.parse_args(argv)
 
@@ -142,7 +163,7 @@ def main(argv=None) -> int:
         print(json.dumps(report.to_json(), indent=1))
         return 0 if report.merge is None or not report.merge.conflicts else 1
 
-    g = _graph(args.repo)
+    g = _graph(args.repo, lzma_preset=args.lzma_preset)
 
     if args.cmd == "log":
         print(g.log() or "(empty lineage graph)")
@@ -209,6 +230,26 @@ def main(argv=None) -> int:
             "plan": {"base": plan.base_kind, "chain_depth": plan.depth},
             "bytes_materialized": g.store.io_stats["bytes_materialized"],
         }, indent=1))
+    elif args.cmd == "checkout":
+        # Batched full-model checkout: chain folding collapses same-eps
+        # delta chains into one dequant per parameter; decode fans out
+        # across the store's worker pool (DESIGN.md §10.3).
+        import time as _time
+        node = g.nodes[args.node]
+        if node.artifact_ref is None or g.store is None:
+            print(f"node {args.node!r} has no stored artifact")
+            return 1
+        g.store.reset_io_stats()
+        t0 = _time.perf_counter()
+        artifact = g.store.materialize_artifact(node.artifact_ref,
+                                                max_workers=args.jobs)
+        dt = _time.perf_counter() - t0
+        print(json.dumps({
+            "node": args.node, "params": len(artifact.params),
+            "bytes": artifact.nbytes(), "seconds": round(dt, 4),
+            "io": dict(g.store.io_stats),
+            "zero_copy_gets": g.store.cas.stats["zero_copy_gets"],
+        }, indent=1))
     elif args.cmd == "stats":
         print(json.dumps(g.store.stats(), indent=1))
     elif args.cmd == "gc":
@@ -250,7 +291,9 @@ def main(argv=None) -> int:
         return 0 if report["ok"] else 1
     elif args.cmd == "diag":
         from repro import diag
-        runner = diag.DiagnosticsRunner(g, max_workers=args.jobs)
+        runner = diag.DiagnosticsRunner(g, max_workers=args.jobs,
+                                        prefetch=getattr(args, "prefetch",
+                                                         False))
         if args.builtin:
             _register_builtin_probes(g)
         if args.action == "run":

@@ -89,6 +89,11 @@ class LazyParams(MutableMapping):
         if not found:
             raise KeyError(key)
 
+    def __contains__(self, key: object) -> bool:
+        # MutableMapping's default __contains__ calls __getitem__, which
+        # MATERIALIZES the tensor — membership must stay metadata-only
+        return key in self._refs or key in self._overrides
+
     def __iter__(self) -> Iterator[str]:
         for k in self._refs:
             yield k

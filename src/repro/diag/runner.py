@@ -268,12 +268,19 @@ class DiagnosticsRunner:
     def __init__(self, graph: LineageGraph, max_workers: Optional[int] = None,
                  ledger: Optional[ResultLedger] = None,
                  transfer: bool = False,
-                 max_transfer_divergence: float = 0.0) -> None:
+                 max_transfer_divergence: float = 0.0,
+                 prefetch: bool = False) -> None:
         self.graph = graph
         self.ledger = ledger or ResultLedger(graph.store)
         self.max_workers = max_workers or min(8, (os.cpu_count() or 2))
         self.transfer = transfer
         self.max_transfer_divergence = max_transfer_divergence
+        # prefetch=True batch-materializes a node's stored artifact through
+        # ArtifactStore.materialize_artifact (chain folding + threaded
+        # decode; DESIGN.md §10.3) before its tests run — right for sweeps
+        # whose tests read most parameters; leave False for scoped tests,
+        # which should only materialize the submodule they touch
+        self.prefetch = prefetch
         self.stats = {"executed": 0, "memo_hits": 0, "checkouts": 0,
                       "transferred_runs": 0}
         self._checkout_cache: Dict[str, ModelArtifact] = {}
@@ -306,6 +313,11 @@ class DiagnosticsRunner:
         if cached is not None:
             return cached
         if node.artifact_ref is not None and self.graph.store is not None:
+            if self.prefetch:
+                # batched checkout: whole-model tests hit a warm tensor
+                # cache instead of paying one chain walk per parameter
+                # inside the test body (the fan-out threads then share it)
+                self.graph.store.materialize_artifact(node.artifact_ref)
             artifact = self.graph.store.load_artifact(node.artifact_ref)
         else:
             artifact = node.get_model()

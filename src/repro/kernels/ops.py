@@ -118,6 +118,37 @@ def dequant_apply(p1, q, eps: float = 1e-4, out_dtype=None,
     return out.astype(out_dtype or p1.dtype)
 
 
+def chain_apply(base, qs, eps: float = 1e-4, out_dtype=None,
+                backend: Optional[str] = None):
+    """Fused delta-chain application: ``base - sum(qs) * scale`` (§10.2).
+
+    ``qs`` is a sequence of quantized deltas (int8/int32) from one same-eps
+    chain segment. One HBM pass on TPU (int32 reduction in VMEM); bit-
+    identical to summing on the host and calling ``dequant_apply`` once —
+    int32 sums are exact, and the final multiply+subtract is the same
+    correctly-rounded f32 op either way."""
+    backend = backend or default_backend()
+    base = jnp.asarray(base)
+    stack = jnp.stack([jnp.asarray(q, dtype=jnp.int32).reshape(base.shape)
+                       for q in qs])
+    if backend == "ref":
+        from repro.kernels.chain_apply import chain_apply_ref
+        out = chain_apply_ref(base, stack, eps)
+        return out.astype(out_dtype or base.dtype)
+    from repro.kernels.chain_apply import chain_apply_2d
+    orig_shape = base.shape
+    a, n = _to_2d(base.astype(jnp.float32))
+    # pad each q independently to the canonical layout (zero padding is
+    # exact: padded lanes contribute 0 to the int32 sum)
+    q2d = jnp.stack([_to_2d(stack[i])[0].astype(jnp.int32)
+                     for i in range(stack.shape[0])])
+    out2d = chain_apply_2d(a, q2d, eps=eps,
+                           block_rows=_block_rows(a.shape[0]),
+                           interpret=(backend == "interpret"))
+    out = out2d.reshape(-1)[:n].reshape(orig_shape)
+    return out.astype(out_dtype or base.dtype)
+
+
 # ---------------------------------------------------------------------------
 # fingerprint
 # ---------------------------------------------------------------------------
@@ -127,18 +158,22 @@ def _fingerprint_ref_2d(bits: jnp.ndarray) -> jnp.ndarray:
     return _ref.fingerprint_ref(bits)
 
 
-def snapshot_fused(p1, p2, eps: float = 1e-4, backend: Optional[str] = None):
+def snapshot_fused(p1, p2, eps: float = 1e-4, backend: Optional[str] = None,
+                   with_fingerprint: bool = True):
     """One-pass checkpoint snapshot: (q int8|int32, n_zero, fingerprint, narrow).
 
     Fuses delta_quantize + fingerprint(p2) into a single HBM pass (9 bytes
     per fp32 param vs 16 unfused; §Perf-C) and narrows q to int8 when every
     value fits; tensors with overflow fall back to int32 (`narrow=False`).
+    ``with_fingerprint=False`` elides the fingerprint (returned as None) —
+    the commit pipeline keys objects by SHA-256 and never reads it, and on
+    the ref backend the fingerprint is a separate full pass worth skipping.
     """
     backend = backend or default_backend()
     p1 = jnp.asarray(p1)
     p2 = jnp.asarray(p2)
     orig_shape = p1.shape
-    fp = fingerprint(p2, backend=backend)
+    fp = fingerprint(p2, backend=backend) if with_fingerprint else None
     if backend == "ref":
         from repro.kernels.snapshot_fused import snapshot_fused_ref
         q8, zeros, overflow = snapshot_fused_ref(jnp.ravel(p1), jnp.ravel(p2),
@@ -179,4 +214,5 @@ def fingerprint(x, backend: Optional[str] = None) -> int:
     return ((h1 ^ salt) << 32) | h2
 
 
-__all__ = ["delta_quantize", "dequant_apply", "fingerprint", "default_backend"]
+__all__ = ["delta_quantize", "dequant_apply", "chain_apply", "fingerprint",
+           "default_backend"]

@@ -11,7 +11,8 @@ Full tensors dedup automatically through content hashing; delta entries point
 at their parent manifest (paper §4). ``max_chain_depth`` bounds reconstruction
 latency, like git packfile delta-depth limits (beyond-paper knob).
 
-Reconstruction is *plan-based and lazy* (DESIGN.md §3.3–3.4):
+Reconstruction is *plan-based and lazy* (DESIGN.md §3.3–3.4), and both hot
+paths are batched, pipelined engines (DESIGN.md §10):
 
 * ``load_artifact`` returns a lazy artifact whose params materialize
   per-tensor on first access — checkout/diff/traversal never force a full
@@ -19,12 +20,26 @@ Reconstruction is *plan-based and lazy* (DESIGN.md §3.3–3.4):
 * ``resolve_chain(ref, key)`` walks one parameter's delta chain iteratively
   and emits a flat :class:`ReconstructionPlan` — ``(blob, parent)`` hops down
   to the first full tensor (or a cache hit);
-* ``materialize_param`` executes the plan bottom-up with one
-  ``dequant_apply`` per hop, so peak memory is O(tensor x chain depth), not
-  O(full model x chain depth) like the old recursive whole-artifact loader
-  (kept as ``load_artifact_recursive`` — the benchmark baseline);
+* ``materialize_param`` executes the chain with *segment folding*: runs of
+  same-eps float32 hops accumulate into one exact int32 delta sum and apply
+  as a SINGLE dequant (dequant is linear in q at fixed eps) — a depth-k
+  uniform chain costs one dequant instead of k. Mixed-eps / non-f32 hops
+  fall back to hop-by-hop within their own segments (§10.2);
+* ``materialize_artifact`` is the batched checkout: per-param chains resolve
+  against shared manifest/fold state and decode+fold fans out across a
+  thread pool (LZMA decode releases the GIL);
+* ``commit_artifact`` is a pipelined encoder by default: device quantization
+  (``ops.snapshot_fused``) overlaps host codec work on a thread pool, the
+  parent's reconstruction state resolves once per chain, and all objects
+  land through one buffered ``CAS.batch()`` with a single fsync at the
+  commit point. ``pipelined=False`` preserves the serial PR-1 path as the
+  benchmark baseline (it implies ``fold_enabled=False`` — the two paths
+  define reconstruction truth differently and must not be mixed in one
+  store, §10.2);
 * materialized tensors land in a byte-budget LRU (``cache_budget_bytes``)
-  shared by every artifact the store serves.
+  shared by every artifact the store serves; fold states (the open-segment
+  ``(seg_base, Σq)`` pairs that let chains *extend* bit-exactly) land in a
+  sibling :class:`FoldCache`.
 """
 
 from __future__ import annotations
@@ -35,6 +50,7 @@ import json
 import os
 import threading
 from collections import OrderedDict
+from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -43,8 +59,11 @@ from repro.common.hashing import bytes_hash, tensor_hash
 from repro.core.artifact import LazyParams, ModelArtifact, ParamRef
 from repro.core.graphir import LayerGraph
 from repro.store.cas import CAS
-from repro.store.delta import (CompressResult, ParamDelta, decompress_param,
-                               delta_compression)
+from repro.store.codecs import get_codec
+from repro.store.delta import (CompressResult, ParamDelta, decode_q,
+                               decompress_param, delta_compression,
+                               host_dequant, host_snapshot,
+                               lcs_param_matching)
 from repro.store.manifest_walk import walk_manifests
 
 
@@ -81,6 +100,26 @@ class ReconstructionPlan:
     @property
     def depth(self) -> int:
         return len(self.hops)
+
+
+@dataclasses.dataclass(frozen=True)
+class FoldState:
+    """Open-segment reconstruction state of one materialized parameter.
+
+    The param's canonical value is ``dequant(seg_base, q_open, eps)``; a
+    child hop with the same eps *extends* the segment bit-exactly:
+    ``dequant(seg_base, q_open + q_child, eps)`` (int32 sums are exact, so
+    the fold is associative even though float dequant is not). This is what
+    lets commit derive a child's stored truth in one dequant and checkout
+    collapse whole chains (DESIGN.md §10.2)."""
+
+    seg_base: np.ndarray   # value BEFORE the open segment (read-only)
+    q_open: np.ndarray     # int32 sum of the open segment's quantized deltas
+    eps: float
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.seg_base.nbytes) + int(self.q_open.nbytes)
 
 
 class TensorCache:
@@ -142,6 +181,53 @@ class TensorCache:
         return len(self._entries)
 
 
+class FoldCache:
+    """Byte-budget LRU over :class:`FoldState`, keyed by (manifest_ref, key).
+
+    Purely a performance cache: a fold state is always recomputable from the
+    chain, and extending from a cached state is bit-exact by construction
+    (int32 sums), so eviction can never change reconstruction results."""
+
+    def __init__(self, budget_bytes: int) -> None:
+        self.budget_bytes = budget_bytes
+        self._entries: "OrderedDict[Tuple[str, str], FoldState]" = OrderedDict()
+        self._lock = threading.RLock()
+        self.bytes_used = 0
+
+    def get(self, key: Tuple[str, str]) -> Optional[FoldState]:
+        with self._lock:
+            fs = self._entries.get(key)
+            if fs is not None:
+                self._entries.move_to_end(key)
+            return fs
+
+    def put(self, key: Tuple[str, str], fs: FoldState) -> None:
+        if fs.nbytes > self.budget_bytes:
+            return
+        with self._lock:
+            old = self._entries.pop(key, None)
+            if old is not None:
+                self.bytes_used -= old.nbytes
+            self._entries[key] = fs
+            self.bytes_used += fs.nbytes
+            while self.bytes_used > self.budget_bytes and self._entries:
+                _, evicted = self._entries.popitem(last=False)
+                self.bytes_used -= evicted.nbytes
+
+    def drop_ref(self, ref: str) -> None:
+        with self._lock:
+            for k in [k for k in self._entries if k[0] == ref]:
+                self.bytes_used -= self._entries.pop(k).nbytes
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self.bytes_used = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+
 class ArtifactStore:
     """The ``store`` object a :class:`repro.core.LineageGraph` plugs into."""
 
@@ -152,7 +238,12 @@ class ArtifactStore:
                  cache_budget_bytes: int = 256 * 2**20,
                  zero_frac_prefilter: float = 0.0,
                  backend: Optional[str] = None,
-                 pack_threshold: int = 4096) -> None:
+                 pack_threshold: int = 256 * 2**10,
+                 pipelined: bool = True,
+                 fold_enabled: bool = True,
+                 fold_budget_bytes: int = 256 * 2**20,
+                 lzma_preset: Optional[int] = None,
+                 io_workers: Optional[int] = None) -> None:
         self.cas = CAS(root, pack_threshold=pack_threshold)
         self.codec = codec
         self.eps = eps
@@ -162,89 +253,310 @@ class ArtifactStore:
         self.max_chain_depth = max_chain_depth
         self.zero_frac_prefilter = zero_frac_prefilter
         self.backend = backend
+        self.pipelined = pipelined
+        # The serial baseline defines truth hop-by-hop; folding defines it
+        # segment-wise. One store must pick ONE definition (§10.2).
+        self.fold_enabled = fold_enabled and pipelined
+        # LZMA preset default: the pipelined engine ships with preset 0 —
+        # on quantized-delta streams it compresses as well as preset 1 at
+        # ~2x the encode/decode speed (see bench_compression's preset
+        # sweep); the serial baseline keeps the historical preset-1 codec.
+        if lzma_preset is None and pipelined and codec == "lzma":
+            lzma_preset = 0
+        self.lzma_preset = lzma_preset
+        self.io_workers = io_workers or max(2, min(4, os.cpu_count() or 2))
+        self._codec_obj = get_codec(codec, preset=lzma_preset)
+        self._pool: Optional[ThreadPoolExecutor] = None
         self._manifests: Dict[str, Dict[str, Any]] = {}
         self.cache = TensorCache(cache_budget_bytes)
+        self.fold_cache = FoldCache(fold_budget_bytes)
         self.logical_bytes = 0
         self.last_result: Optional[CompressResult] = None
         # per-store materialization accounting (reset with reset_io_stats)
         self.io_stats = {"tensors_materialized": 0, "bytes_materialized": 0,
-                         "chain_hops": 0, "plans_resolved": 0}
+                         "chain_hops": 0, "plans_resolved": 0,
+                         "dequant_calls": 0, "hops_folded": 0, "fold_hits": 0}
+        self._lock = threading.RLock()   # manifests dict + counters
         self._stats_path = (os.path.join(root, "store_stats.json")
                             if root else None)
         if self._stats_path and os.path.exists(self._stats_path):
             with open(self._stats_path) as f:
-                self.logical_bytes = json.load(f).get("logical_bytes", 0)
+                payload = json.load(f)
+            self.logical_bytes = payload.get("logical_bytes", 0)
+            self._adopt_truth(payload.get("truth"))
+
+    def _adopt_truth(self, recorded: Optional[str]) -> None:
+        """Enforce one reconstruction-truth definition per repository.
+
+        Fold and hop-by-hop reconstruction produce (equally valid but)
+        different bits for depth>=2 chains, so manifests written under one
+        definition must never be materialized under the other (§10.2). The
+        definition is persisted in store_stats.json at first commit:
+
+        * recorded == configured: fine;
+        * recorded missing but commits exist (store_stats.json predates the
+          marker — a PR-1..3 repo): its chains are hop-by-hop truth; adopt
+          that rather than silently diverge from the recorded hashes;
+        * recorded conflicts with an explicit config: fail fast."""
+        configured = "fold" if self.fold_enabled else "hopwise"
+        if recorded is None:
+            if self.fold_enabled:
+                self.fold_enabled = False
+                self.pipelined = False
+        elif recorded != configured:
+            raise ValueError(
+                f"store at {self.cas.root!r} was committed with "
+                f"{recorded!r} reconstruction truth but this instance is "
+                f"configured for {configured!r} — reopen with "
+                f"{'pipelined=True (default)' if recorded == 'fold' else 'pipelined=False'} "
+                f"(DESIGN.md §10.2: one truth definition per repository)")
+
+    def _executor(self) -> ThreadPoolExecutor:
+        """Shared worker pool for commit encode + batched checkout decode.
+
+        Lazily created and kept for the store's lifetime — spawning a pool
+        per operation costs more than a short commit's entire codec work.
+        Workers never submit back into the pool (materialize_param is
+        submission-free), so shared use cannot deadlock."""
+        with self._lock:
+            if self._pool is None:
+                self._pool = ThreadPoolExecutor(
+                    max_workers=self.io_workers,
+                    thread_name_prefix="artifact-store-io")
+            return self._pool
 
     # -- commit -----------------------------------------------------------------
     def commit_artifact(self, name: str, artifact: ModelArtifact,
                         parent_ref: Optional[str] = None,
                         tests: Sequence = ()) -> str:
-        self.logical_bytes += artifact.nbytes()
+        with self._lock:
+            self.logical_bytes += artifact.nbytes()
         self._persist_stats()
         entries: Dict[str, Any] = {}
         depth = 0
 
         deltas = {}
+        precomputed_hashes: Dict[str, str] = {}
+        commit_result: Optional[CompressResult] = None
         if self.delta_enabled and parent_ref is not None:
             parent_manifest = self.get_manifest(parent_ref)
             if parent_manifest["depth"] < self.max_chain_depth:
-                # lazy view: delta_compression materializes parent params
-                # one-at-a-time through the chain resolver
-                parent = self.load_artifact(parent_ref)
-                result = delta_compression(
-                    artifact, parent, t_thr=self.t_thr, eps=self.eps,
-                    codec=self.codec, tests=tests, per_param=self.per_param,
-                    zero_frac_prefilter=self.zero_frac_prefilter,
-                    backend=self.backend)
-                self.last_result = result
+                if self.pipelined:
+                    result = self._delta_compress_pipelined(
+                        artifact, parent_ref, tests)
+                else:
+                    # serial baseline: lazy parent view, one param at a time
+                    parent = self.load_artifact(parent_ref)
+                    result = delta_compression(
+                        artifact, parent, t_thr=self.t_thr, eps=self.eps,
+                        codec=self.codec, tests=tests,
+                        per_param=self.per_param,
+                        zero_frac_prefilter=self.zero_frac_prefilter,
+                        backend=self.backend)
+                self.last_result = commit_result = result
                 if result.accepted:
                     deltas = result.deltas
+                    precomputed_hashes = result.param_hashes
                     depth = parent_manifest["depth"] + 1
                     # persist the *reconstructed* model as this version's truth
                     artifact = result.reconstructed
 
-        for key in artifact.params:
-            value = np.asarray(artifact.params[key])
-            thash = tensor_hash(value)  # content identity for every entry
-            if key in deltas:
-                d = deltas[key]
-                blob_hash = self.cas.put_bytes(d.blob)
-                entries[key] = {"kind": "delta", "blob": blob_hash,
-                                "parent_ref": parent_ref,
-                                "parent_key": d.parent_key, "codec": d.codec,
-                                "eps": d.eps, "shape": list(d.shape),
-                                "dtype": d.dtype, "qdtype": d.qdtype,
-                                "hash": thash}
-            else:
-                self.cas.put_tensor(value, key=thash)  # content-hash dedup
-                entries[key] = {"kind": "full", "tensor": thash,
-                                "shape": list(value.shape),
-                                "dtype": str(value.dtype), "hash": thash}
+        with self.cas.batch():  # one append handle per pack, one fsync
+            for key in artifact.params:
+                value = np.asarray(artifact.params[key])
+                # content identity for every entry (worker-precomputed for
+                # pipelined delta params)
+                thash = precomputed_hashes.get(key) or tensor_hash(value)
+                if key in deltas:
+                    d = deltas[key]
+                    blob_hash = self.cas.put_bytes(d.blob)
+                    entries[key] = {"kind": "delta", "blob": blob_hash,
+                                    "parent_ref": parent_ref,
+                                    "parent_key": d.parent_key,
+                                    "codec": d.codec,
+                                    "eps": d.eps, "shape": list(d.shape),
+                                    "dtype": d.dtype, "qdtype": d.qdtype,
+                                    "hash": thash}
+                else:
+                    self.cas.put_tensor(value, key=thash)  # content-hash dedup
+                    entries[key] = {"kind": "full", "tensor": thash,
+                                    "shape": list(value.shape),
+                                    "dtype": str(value.dtype), "hash": thash}
 
-        delta_parents = sorted({e["parent_ref"] for e in entries.values()
-                                if e["kind"] == "delta"})
-        for pref in delta_parents:
-            self.cas.incref(pref)  # chain dependency: parent must outlive child
-        manifest = {
-            "name": name,
-            "model_type": artifact.model_type,
-            "metadata": artifact.metadata,
-            "graph": artifact.graph.to_json(),
-            "params": entries,
-            "depth": depth,
-            "delta_parents": delta_parents,
-        }
-        payload = json.dumps(manifest, sort_keys=True, default=str).encode()
-        ref = self.cas.put_bytes(payload, key="m_" + bytes_hash(payload))
-        self._manifests[ref] = manifest
+            delta_parents = sorted({e["parent_ref"] for e in entries.values()
+                                    if e["kind"] == "delta"})
+            with self.cas.batched_refcounts():
+                for pref in delta_parents:
+                    self.cas.incref(pref)  # parent must outlive child
+            manifest = {
+                "name": name,
+                "model_type": artifact.model_type,
+                "metadata": artifact.metadata,
+                "graph": artifact.graph.to_json(),
+                "params": entries,
+                "depth": depth,
+                "delta_parents": delta_parents,
+            }
+            payload = json.dumps(manifest, sort_keys=True, default=str).encode()
+            ref = self.cas.put_bytes(payload, key="m_" + bytes_hash(payload))
+        with self._lock:
+            self._manifests[ref] = manifest
+        if deltas and commit_result is not None:
+            # seed the caches with this commit's reconstructed truth: the
+            # NEXT commit onto this chain (or a checkout of it) resolves the
+            # parent entirely from cache — zero decodes, zero dequants
+            for ckey, st in commit_result.fold_states.items():
+                self.fold_cache.put((ref, ckey), st)
+            for ckey in deltas:
+                value = artifact.params.get(ckey)
+                if value is not None:
+                    self.cache.put((ref, ckey), np.asarray(value))
         self.cas.flush()  # commit point: index + refcounts durable
         return ref
 
+    def _delta_compress_pipelined(self, child: ModelArtifact, parent_ref: str,
+                                  tests: Sequence = ()) -> CompressResult:
+        """Throughput-first Algorithm 1 (DESIGN.md §10.1).
+
+        Stages, overlapped across a thread pool (GIL-releasing LZMA/XLA):
+
+        1. the parent's reconstruction state resolves ONCE per chain —
+           ``materialize_artifact`` warms tensor + fold caches in a batch;
+        2. per matched pair, a worker runs the fused device pass
+           (``ops.snapshot_fused``, fingerprint elided: commit never reads
+           it), encodes the quantized delta, and derives the child's stored
+           truth with one fold-extended dequant;
+        3. acceptance and test-gating mirror :func:`delta_compression`
+           exactly (per-param or whole-model, ``t_thr`` rejection).
+        """
+        from repro.kernels import ops
+
+        cod = self._codec_obj
+        parent_lazy = self.load_artifact(parent_ref)
+        pairs = [(pk, ck) for pk, ck in lcs_param_matching(parent_lazy, child)]
+        pvals = self.materialize_artifact(
+            parent_ref, keys=[pk for pk, _ in pairs]).params
+
+        host = self.backend in (None, "ref")
+
+        def process(pair):
+            pkey, ckey = pair
+            p1 = np.asarray(pvals[pkey])
+            p2 = np.asarray(child.params[ckey])
+            if p1.size == 0:
+                return None
+            if host:  # numpy twin, bit-identical, no dispatch overhead
+                q, nz, _narrow = host_snapshot(p1, p2, self.eps)
+            else:
+                q, nz, _fp, _narrow = ops.snapshot_fused(
+                    p1, p2, eps=self.eps, backend=self.backend,
+                    with_fingerprint=False)
+                q = np.asarray(q)
+            if nz / q.size < self.zero_frac_prefilter:
+                return None  # on-device pre-filter: won't compress
+            blob = cod.encode(q)
+            if self.per_param and len(blob) >= p2.nbytes:
+                return None  # no saving for this tensor
+            q32 = q if q.dtype == np.int32 else q.astype(np.int32)
+            recon, state = self._commit_truth(parent_ref, pkey, p1, q32,
+                                              str(p2.dtype))
+            recon = recon.reshape(p2.shape)
+            delta = ParamDelta(
+                child_key=ckey, parent_key=pkey, blob=blob, codec=self.codec,
+                eps=self.eps, shape=tuple(p2.shape), dtype=str(p2.dtype),
+                raw_bytes=int(p2.nbytes), qdtype=str(q.dtype))
+            return ckey, delta, recon, tensor_hash(recon), state
+
+        if len(pairs) > 1 and self.io_workers > 1:
+            produced = list(self._executor().map(process, pairs))
+        else:
+            produced = [process(p) for p in pairs]
+
+        candidates: Dict[str, ParamDelta] = {}
+        recon_params: Dict[str, np.ndarray] = {}
+        hashes: Dict[str, str] = {}
+        states: Dict[str, FoldState] = {}
+        for item in produced:
+            if item is None:
+                continue
+            ckey, delta, recon, thash, state = item
+            candidates[ckey] = delta
+            recon_params[ckey] = recon
+            hashes[ckey] = thash
+            if state is not None:
+                states[ckey] = state
+
+        total_raw = child.nbytes()
+        delta_raw = sum(d.raw_bytes for d in candidates.values())
+        delta_compressed = sum(len(d.blob) for d in candidates.values())
+        storage_saving = delta_raw / max(delta_compressed, 1)
+        if not candidates or (not self.per_param and storage_saving < 1.0):
+            return CompressResult(False, {}, child, {}, total_raw, total_raw)
+
+        m2_prime = child.replace_params(recon_params)
+        test_deltas: Dict[str, float] = {}
+        for t in tests:
+            before = float(t.fn(child))
+            after = float(t.fn(m2_prime))
+            test_deltas[t.name] = after - before
+            if abs(after - before) > self.t_thr:
+                return CompressResult(False, {}, child, test_deltas,
+                                      total_raw, total_raw)
+        compressed_total = (total_raw - delta_raw) + delta_compressed
+        return CompressResult(True, candidates, m2_prime, test_deltas,
+                              total_raw, compressed_total,
+                              param_hashes=hashes, fold_states=states)
+
+    def _commit_truth(self, parent_ref: str, parent_key: str,
+                      parent_value: np.ndarray, q32: np.ndarray,
+                      dtype: str) -> Tuple[np.ndarray, Optional[FoldState]]:
+        """The child's canonical stored value for a new delta hop, plus its
+        resulting open-segment fold state.
+
+        Fold-extends the parent's open segment when eps+dtype allow —
+        EXACTLY what checkout computes for the same chain (§10.2) — else
+        opens a new segment from the parent's value. Device-backend stores
+        dequant through the same jit'd kernel checkout uses, so stored
+        hashes always match what a later checkout reproduces."""
+        if self.backend in (None, "ref"):
+            dequant = host_dequant
+        else:
+            from repro.kernels import ops
+
+            def dequant(v, q, eps, out_dtype="float32"):
+                return np.asarray(ops.dequant_apply(
+                    np.asarray(v), q, eps=eps, backend=self.backend,
+                    out_dtype=out_dtype))
+
+        if dtype == "float32" and self.fold_enabled:
+            fs = self.fold_cache.get((parent_ref, parent_key))
+            if fs is None:
+                e = self._entry(parent_ref, parent_key)
+                if e["kind"] == "delta":  # state evicted: recompute it
+                    _, fs = self._materialize_with_state(parent_ref,
+                                                         parent_key)
+            if fs is not None and fs.eps == self.eps:
+                state = FoldState(
+                    seg_base=fs.seg_base,
+                    q_open=np.add(fs.q_open, q32.reshape(fs.q_open.shape),
+                                  dtype=np.int32),
+                    eps=self.eps)
+            else:
+                state = FoldState(seg_base=np.asarray(parent_value),
+                                  q_open=q32, eps=self.eps)
+            return dequant(state.seg_base, state.q_open, self.eps), state
+        return dequant(parent_value, q32, self.eps, out_dtype=dtype), None
+
     # -- manifests ----------------------------------------------------------------
     def get_manifest(self, ref: str) -> Dict[str, Any]:
-        if ref not in self._manifests:
-            self._manifests[ref] = json.loads(self.cas.get_bytes(ref))
-        return self._manifests[ref]
+        with self._lock:
+            cached = self._manifests.get(ref)
+        if cached is not None:
+            return cached
+        manifest = json.loads(self.cas.get_bytes(ref))
+        with self._lock:
+            self._manifests[ref] = manifest
+        return manifest
 
     def _entry(self, ref: str, key: str) -> Dict[str, Any]:
         manifest = self.get_manifest(ref)
@@ -254,18 +566,16 @@ class ArtifactStore:
             raise KeyError(f"manifest {ref!r} has no param {key!r}")
 
     # -- chain resolution ---------------------------------------------------------
-    def resolve_chain(self, ref: str, key: str) -> ReconstructionPlan:
-        """Walk one parameter's delta chain; emit a flat reconstruction plan.
+    def _walk_entries(self, ref: str, key: str):
+        """Yield ``(ref, key, entry)`` down one parameter's delta chain.
 
-        Iterative (no recursion) and single-parameter: sibling tensors are
-        never touched. The walk stops early at the first chain link already
-        materialized in the tensor cache."""
-        self.io_stats["plans_resolved"] += 1
-        hops: List[DeltaHop] = []
+        The ONE chain-walk loop every resolver shares (plan inspection,
+        fold recipes, manifest prefetch). Iterative, cycle-checked via a
+        visited set — NOT this store's max_chain_depth: the store may have
+        been reopened with a smaller depth knob than the one the chain was
+        written with, and that is valid data. Ends after the first
+        ``full``-kind entry; callers early-exit by breaking."""
         cur_ref, cur_key = ref, key
-        # Termination is a visited-set, NOT this store's max_chain_depth:
-        # the store may have been reopened with a smaller depth knob than the
-        # one the chain was written with, and that is valid data.
         seen = set()
         while True:
             if (cur_ref, cur_key) in seen:
@@ -273,64 +583,274 @@ class ArtifactStore:
                     f"delta chain cycle at {cur_ref!r}:{cur_key!r} "
                     f"(corrupt manifest chain)")
             seen.add((cur_ref, cur_key))
+            e = self._entry(cur_ref, cur_key)
+            yield cur_ref, cur_key, e
+            if e["kind"] == "full":
+                return
+            cur_ref, cur_key = e["parent_ref"], e["parent_key"]
+
+    def resolve_chain(self, ref: str, key: str) -> ReconstructionPlan:
+        """Walk one parameter's delta chain; emit a flat reconstruction plan.
+
+        Iterative (no recursion) and single-parameter: sibling tensors are
+        never touched. The walk stops early at the first chain link already
+        materialized in the tensor cache."""
+        with self._lock:
+            self.io_stats["plans_resolved"] += 1
+        hops: List[DeltaHop] = []
+        for cur_ref, cur_key, e in self._walk_entries(ref, key):
             if hops and self.cache.contains((cur_ref, cur_key)):
                 return ReconstructionPlan("cache", (cur_ref, cur_key),
                                           tuple(reversed(hops)))
-            e = self._entry(cur_ref, cur_key)
             if e["kind"] == "full":
                 return ReconstructionPlan("full", e["tensor"],
                                           tuple(reversed(hops)))
-            hops.append(DeltaHop(
-                ref=cur_ref, key=cur_key, blob=e["blob"], codec=e["codec"],
-                eps=e["eps"], shape=tuple(e["shape"]), dtype=e["dtype"],
-                qdtype=e.get("qdtype", "int32")))
-            cur_ref, cur_key = e["parent_ref"], e["parent_key"]
+            hops.append(self._hop_of(e, cur_ref, cur_key))
+
+    @staticmethod
+    def _hop_of(e: Dict[str, Any], ref: str, key: str) -> DeltaHop:
+        return DeltaHop(ref=ref, key=key, blob=e["blob"], codec=e["codec"],
+                        eps=e["eps"], shape=tuple(e["shape"]),
+                        dtype=e["dtype"], qdtype=e.get("qdtype", "int32"))
+
+    @staticmethod
+    def _is_segment_boundary(above: DeltaHop, below: Dict[str, Any]) -> bool:
+        """True iff hop ``above`` STARTS a new fold segment over entry
+        ``below`` (its chain parent). Structural — depends only on manifest
+        metadata, never on cache state, so every reader segments a chain
+        identically (§10.2)."""
+        return (above.dtype != "float32" or below["dtype"] != "float32"
+                or float(below["eps"]) != above.eps)
+
+    def _resolve_recipe(self, ref: str, key: str):
+        """Chain walk for the folding executor.
+
+        Returns ``(origin, pending)`` where ``pending`` lists hops tip-first
+        and ``origin`` is one of ``("tensor", hash)`` — the chain base —
+        ``("value", ndarray)`` — a cached link at a segment boundary (safe:
+        the hops above it fold independently of how the link was computed) —
+        or ``("fold", FoldState)`` — a cached open-segment state the
+        remaining hops extend bit-exactly."""
+        with self._lock:
+            self.io_stats["plans_resolved"] += 1
+        pending: List[DeltaHop] = []
+        for cur_ref, cur_key, e in self._walk_entries(ref, key):
+            if e["kind"] == "full":
+                if pending:
+                    v = self.cache.get((cur_ref, cur_key))
+                    if v is not None:
+                        return ("value", v), pending
+                return ("tensor", e["tensor"]), pending
+            if pending:
+                if self.fold_enabled:
+                    fs = self.fold_cache.get((cur_ref, cur_key))
+                    if fs is not None:
+                        with self._lock:
+                            self.io_stats["fold_hits"] += 1
+                        return ("fold", fs), pending
+                if self._is_segment_boundary(pending[-1], e):
+                    v = self.cache.get((cur_ref, cur_key))
+                    if v is not None:
+                        return ("value", v), pending
+            pending.append(self._hop_of(e, cur_ref, cur_key))
+
+    def _dequant(self, value: np.ndarray, q: np.ndarray, eps: float,
+                 out_dtype: str) -> np.ndarray:
+        """One counted dequant application.
+
+        The pipelined engine uses the numpy host path on CPU hosts (bit-
+        identical to the jax ref kernel, no dispatch overhead); the serial
+        baseline (``pipelined=False``) keeps the original per-hop jax
+        dispatch so benchmarks measure the pre-pipeline engine faithfully.
+        Device backends always dispatch."""
+        if self.pipelined and self.backend in (None, "ref"):
+            out = host_dequant(value, q, eps, out_dtype=out_dtype)
+        else:
+            from repro.kernels import ops
+            out = np.asarray(ops.dequant_apply(
+                np.asarray(value), q, eps=eps, backend=self.backend,
+                out_dtype=out_dtype))
+        with self._lock:
+            self.io_stats["dequant_calls"] += 1
+        self._count_materialization(out)
+        return out
+
+    def _sum_q(self, qs: List[np.ndarray]) -> np.ndarray:
+        """Exact int32 sum of a segment's quantized deltas (narrowed int8
+        hops widen on the first accumulation; a cached state's sum is
+        never mutated — the first add allocates)."""
+        acc = qs[0] if qs[0].dtype == np.int32 else qs[0].astype(np.int32)
+        for q in qs[1:]:
+            acc = np.add(acc, q.reshape(acc.shape), dtype=np.int32)
+        return acc
+
+    def _apply_segment(self, value: np.ndarray, open_qs: List[np.ndarray],
+                       eps: float, need_sum: bool
+                       ) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+        """Close one fold segment: value <- dequant(value, Σ open_qs, eps).
+
+        On device backends a multi-hop segment goes through the fused
+        Pallas chain-apply kernel (one HBM pass over base + q stack, int32
+        reduction in VMEM) — bit-identical to host sum + dequant. Returns
+        ``(value, qsum)``; the sum is only computed when the caller needs
+        it for a FoldState (``need_sum``) or the host path uses it."""
+        if len(open_qs) > 1 and self.backend not in (None, "ref"):
+            from repro.kernels import ops
+            out = np.asarray(ops.chain_apply(
+                np.asarray(value), open_qs, eps=eps, backend=self.backend,
+                out_dtype="float32"))
+            with self._lock:
+                self.io_stats["dequant_calls"] += 1
+            self._count_materialization(out)
+            return out, (self._sum_q(open_qs) if need_sum else None)
+        qsum = self._sum_q(open_qs)
+        return self._dequant(value, qsum, eps, "float32"), qsum
+
+    def _materialize_with_state(self, ref: str, key: str,
+                                plan: Optional[ReconstructionPlan] = None
+                                ) -> Tuple[np.ndarray, Optional[FoldState]]:
+        """Execute one param's chain, returning (value, open FoldState|None).
+
+        Bypasses the (ref, key) tensor-cache probe — callers that need the
+        fold state (commit) must re-derive it even when the value is warm.
+        A full-base ``plan`` (from ``resolve_chain``) substitutes for the
+        walk; cache-base plans are not segment-aware and are re-resolved."""
+        if plan is not None and plan.base_kind == "full":
+            origin, pending = ("tensor", plan.base), list(reversed(plan.hops))
+        else:
+            origin, pending = self._resolve_recipe(ref, key)
+        hops = list(reversed(pending))  # base -> tip order
+        kind, payload = origin
+        open_qs: List[np.ndarray] = []
+        open_eps = 0.0
+        if kind == "tensor":
+            value = self.cas.get_tensor(payload)
+            self._count_materialization(value)
+        elif kind == "value":
+            value = payload
+        else:  # fold state: its accumulated sum seeds the open segment
+            fs: FoldState = payload
+            value, open_qs, open_eps = fs.seg_base, [fs.q_open], fs.eps
+        for hop in hops:
+            q = decode_q(hop, self.cas.get_view(hop.blob))
+            with self._lock:
+                self.io_stats["chain_hops"] += 1
+            if self.fold_enabled and hop.dtype == "float32":
+                if open_qs and hop.eps == open_eps:
+                    open_qs.append(q)
+                    with self._lock:
+                        self.io_stats["hops_folded"] += 1
+                else:
+                    if open_qs:
+                        value, _ = self._apply_segment(value, open_qs,
+                                                       open_eps, False)
+                    open_qs, open_eps = [q], hop.eps
+            else:
+                if open_qs:
+                    value, _ = self._apply_segment(value, open_qs, open_eps,
+                                                   False)
+                    open_qs = []
+                value = self._dequant(value, q, hop.eps, hop.dtype
+                                      ).reshape(hop.shape)
+        state = None
+        if open_qs:
+            value = np.asarray(value)
+            new_value, qsum = self._apply_segment(value, open_qs, open_eps,
+                                                  True)
+            state = FoldState(seg_base=value, q_open=qsum, eps=open_eps)
+            value = new_value
+        if hops:
+            value = np.asarray(value).reshape(hops[-1].shape)
+        return value, state
 
     def materialize_param(self, ref: str, key: str,
                           plan: Optional[ReconstructionPlan] = None
                           ) -> np.ndarray:
-        """Materialize one parameter, executing its plan bottom-up.
+        """Materialize one parameter through the segment-folding executor.
 
-        Pass ``plan`` to execute a chain already resolved by
-        ``resolve_chain`` (avoids a second manifest walk)."""
+        A full-base ``plan`` (already resolved by ``resolve_chain``) skips
+        the second chain walk; cache-base plans are re-resolved — their
+        shortcut is not segment-aware."""
         cached = self.cache.get((ref, key))
         if cached is not None:
             return cached
-        if plan is None:
-            plan = self.resolve_chain(ref, key)
-        if plan.base_kind == "cache":
-            value = self.cache.get(plan.base)
-            if value is None:  # evicted between resolve and execute: replan
-                self.cache.misses -= 1  # don't double-count the probe
-                return self.materialize_param(ref, key)
-        else:
-            value = self.cas.get_tensor(plan.base)
-            self._count_materialization(value)
-        for hop in plan.hops:
-            d = ParamDelta(child_key=hop.key, parent_key="", codec=hop.codec,
-                           blob=self.cas.get_bytes(hop.blob), eps=hop.eps,
-                           shape=hop.shape, dtype=hop.dtype, raw_bytes=0,
-                           qdtype=hop.qdtype)
-            value = decompress_param(np.asarray(value), d,
-                                     backend=self.backend)
-            self.io_stats["chain_hops"] += 1
-            self._count_materialization(value)
-            self.cache.put((hop.ref, hop.key), value)
-        if not plan.hops:  # full tensors cache under their own (ref, key) too
-            self.cache.put((ref, key), value)
+        value, state = self._materialize_with_state(ref, key, plan=plan)
+        self.cache.put((ref, key), value)
+        if state is not None:
+            self.fold_cache.put((ref, key), state)
         return value
 
+    def materialize_artifact(self, ref: str,
+                             keys: Optional[Sequence[str]] = None,
+                             max_workers: Optional[int] = None
+                             ) -> ModelArtifact:
+        """Batched checkout: materialize all (or ``keys``) params of ``ref``.
+
+        The full-model counterpart of ``materialize_param`` (DESIGN.md
+        §10.3): per-param chains share manifest state (prefetched once on
+        the calling thread) and fold states, and blob decode + fold fans
+        out across a thread pool — LZMA decompression releases the GIL, so
+        the batch overlaps codec work the serial loop serializes. Returns a
+        NON-lazy artifact; everything lands in the tensor cache, so lazy
+        views of the same ref become cache hits."""
+        manifest = self.get_manifest(ref)
+        want = list(keys if keys is not None else manifest["params"])
+        out: Dict[str, np.ndarray] = {}
+        misses: List[str] = []
+        for k in want:
+            v = self.cache.get((ref, k))
+            if v is not None:
+                out[k] = v
+            else:
+                misses.append(k)
+        if misses:
+            # prefetch the manifest chains serially (dict work, no decode):
+            # worker threads then walk fully-cached manifests
+            for k in misses:
+                for _ in self._walk_entries(ref, k):
+                    pass
+            workers = min(max_workers or self.io_workers, len(misses))
+            if workers > 1 and len(misses) > 1:
+                if max_workers is not None and max_workers != self.io_workers:
+                    # explicit sizing (CLI --jobs): a transient pool of the
+                    # requested width, not the store's shared default
+                    with ThreadPoolExecutor(max_workers=workers) as pool:
+                        mapped = list(pool.map(
+                            lambda k: self.materialize_param(ref, k), misses))
+                else:
+                    mapped = list(self._executor().map(
+                        lambda k: self.materialize_param(ref, k), misses))
+                for k, v in zip(misses, mapped):
+                    out[k] = v
+            else:
+                for k in misses:
+                    out[k] = self.materialize_param(ref, k)
+        return ModelArtifact(
+            graph=LayerGraph.from_json(manifest["graph"]),
+            params={k: out[k] for k in want},
+            model_type=manifest.get("model_type", "generic"),
+            metadata=manifest.get("metadata", {}),
+        )
+
     def _count_materialization(self, value: np.ndarray) -> None:
-        self.io_stats["tensors_materialized"] += 1
-        self.io_stats["bytes_materialized"] += int(np.asarray(value).nbytes)
+        with self._lock:
+            self.io_stats["tensors_materialized"] += 1
+            self.io_stats["bytes_materialized"] += int(
+                np.asarray(value).nbytes)
 
     def reset_io_stats(self) -> None:
-        for k in self.io_stats:
-            self.io_stats[k] = 0
+        with self._lock:
+            for k in self.io_stats:
+                self.io_stats[k] = 0
 
     # -- load --------------------------------------------------------------------
     def load_artifact(self, ref: str, lazy: bool = True) -> ModelArtifact:
-        """Checkout ``ref``. Lazy by default: params materialize on access."""
+        """Checkout ``ref``. Lazy by default: params materialize on access.
+
+        ``lazy=False`` routes through the batched ``materialize_artifact``
+        engine (threaded decode + chain folding)."""
+        if not lazy:
+            return self.materialize_artifact(ref)
         manifest = self.get_manifest(ref)
         refs = {
             key: ParamRef(store=self, ref=ref, key=key,
@@ -339,12 +859,9 @@ class ArtifactStore:
                           hash=e.get("hash") or e.get("tensor"))
             for key, e in manifest["params"].items()
         }
-        params: Any = LazyParams(refs)
-        if not lazy:
-            params = {k: params[k] for k in params}
         return ModelArtifact(
             graph=LayerGraph.from_json(manifest["graph"]),
-            params=params,
+            params=LazyParams(refs),
             model_type=manifest.get("model_type", "generic"),
             metadata=manifest.get("metadata", {}),
         )
@@ -356,32 +873,60 @@ class ArtifactStore:
         Recursively materializes every FULL ancestor artifact to resolve the
         chain — O(full model x chain depth) peak memory. Kept as the
         benchmark baseline for ``benchmarks/bench_compression.py``; all
-        production paths go through ``load_artifact``/``materialize_param``."""
+        production paths go through ``load_artifact``/``materialize_param``.
+        Reconstruction follows the same segment-folding semantics (§10.2) —
+        the recursion threads each param's open-segment state — so its
+        output is bit-identical to the plan engine's."""
+        artifact, _ = self._load_recursive_with_states(ref)
+        return artifact
+
+    def _load_recursive_with_states(self, ref: str):
         manifest = self.get_manifest(ref)
         params: Dict[str, np.ndarray] = {}
-        parent_cache: Dict[str, ModelArtifact] = {}
+        states: Dict[str, Optional[FoldState]] = {}
+        parent_cache: Dict[str, Tuple[ModelArtifact, Dict]] = {}
         for key, e in manifest["params"].items():
             if e["kind"] == "full":
                 params[key] = self.cas.get_tensor(e["tensor"])
+                states[key] = None
+                continue
+            pref = e["parent_ref"]
+            if pref not in parent_cache:
+                parent_cache[pref] = self._load_recursive_with_states(pref)
+            parent_art, parent_states = parent_cache[pref]
+            pkey = e["parent_key"]
+            parent_val = np.asarray(parent_art.params[pkey])
+            hop = self._hop_of(e, ref, key)
+            q = decode_q(hop, self.cas.get_view(hop.blob))
+            ps = parent_states.get(pkey)
+            if self.fold_enabled and hop.dtype == "float32":
+                if ps is not None and ps.eps == hop.eps:
+                    st = FoldState(seg_base=ps.seg_base,
+                                   q_open=np.add(ps.q_open, q.reshape(
+                                       ps.q_open.shape), dtype=np.int32),
+                                   eps=hop.eps)
+                else:
+                    st = FoldState(seg_base=parent_val, q_open=q,
+                                   eps=hop.eps)
+                states[key] = st
+                params[key] = host_dequant(st.seg_base, st.q_open, st.eps
+                                           ).reshape(hop.shape)
             else:
-                pref = e["parent_ref"]
-                if pref not in parent_cache:
-                    parent_cache[pref] = self.load_artifact_recursive(
-                        pref, _depth + 1)
-                parent_val = parent_cache[pref].params[e["parent_key"]]
-                d = ParamDelta(child_key=key, parent_key=e["parent_key"],
+                d = ParamDelta(child_key=key, parent_key=pkey,
                                blob=self.cas.get_bytes(e["blob"]),
                                codec=e["codec"], eps=e["eps"],
                                shape=tuple(e["shape"]), dtype=e["dtype"],
                                raw_bytes=0, qdtype=e.get("qdtype", "int32"))
-                params[key] = decompress_param(np.asarray(parent_val), d,
+                params[key] = decompress_param(parent_val, d,
                                                backend=self.backend)
-        return ModelArtifact(
+                states[key] = None
+        artifact = ModelArtifact(
             graph=LayerGraph.from_json(manifest["graph"]),
             params=params,
             model_type=manifest.get("model_type", "generic"),
             metadata=manifest.get("metadata", {}),
         )
+        return artifact, states
 
     # -- sync/integrity support (DESIGN.md §8) ------------------------------------
     def manifest_closure(self, refs: Sequence[str]
@@ -445,12 +990,15 @@ class ArtifactStore:
         """Raw object ingestion for sync transfers (idempotent per key).
 
         Keys are trusted as content addresses here; ``fsck`` re-verifies.
-        Returns bytes actually written (dedup hits cost nothing)."""
+        Returns bytes actually written (dedup hits cost nothing). Lands
+        through one buffered CAS batch — a pull/clone pays one fsync, not
+        one per object."""
         written = 0
-        for key, data in objects.items():
-            if not self.cas.has(key):
-                self.cas.put_bytes(data, key=key)
-                written += len(data)
+        with self.cas.batch():
+            for key, data in objects.items():
+                if not self.cas.has(key):
+                    self.cas.put_bytes(data, key=key)
+                    written += len(data)
         self.cas.flush()
         return written
 
@@ -464,14 +1012,13 @@ class ArtifactStore:
         every tensor's npy bytes, ready for the wire. Nothing is committed
         into THIS store — a sender must stay refcount-clean after a push
         (committing here would orphan a manifest no lineage node references
-        and bump shared-tensor counts into permanent fsck drift). Peak
-        memory is O(model): tensors materialize through the chain resolver
-        one at a time but their serialized bytes are all held for transfer.
-        Plan execution is bit-exact with commit-time reconstruction
-        (DESIGN.md §3.3), so the flattened model is bit-identical to the
-        chained one."""
+        and bump shared-tensor counts into permanent fsck drift). Tensors
+        materialize through the batched checkout engine; their serialized
+        bytes are all held for transfer, so peak memory is O(model). Plan
+        execution is bit-exact with commit-time reconstruction (§10.2), so
+        the flattened model is bit-identical to the chained one."""
         manifest = self.get_manifest(ref)
-        artifact = self.load_artifact(ref)
+        artifact = self.materialize_artifact(ref)
         entries: Dict[str, Any] = {}
         objects: Dict[str, bytes] = {}
         for key in artifact.params:
@@ -533,6 +1080,7 @@ class ArtifactStore:
                 self.cas.decref(pref)
             self.cas.decref(ref)
         self.cache.drop_ref(ref)
+        self.fold_cache.drop_ref(ref)
 
     def gc(self) -> int:
         return self.cas.gc()
@@ -540,10 +1088,13 @@ class ArtifactStore:
     def _persist_stats(self) -> None:
         if self._stats_path is None:
             return
-        tmp = self._stats_path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump({"logical_bytes": self.logical_bytes}, f)
-        os.replace(tmp, self._stats_path)
+        with self._lock:  # concurrent commits share one tmp path
+            tmp = self._stats_path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump({"logical_bytes": self.logical_bytes,
+                           "truth": ("fold" if self.fold_enabled
+                                     else "hopwise")}, f)
+            os.replace(tmp, self._stats_path)
 
     # -- accounting -------------------------------------------------------------------
     def compression_ratio(self) -> float:
@@ -560,6 +1111,9 @@ class ArtifactStore:
             "cache_hits": self.cache.hits,
             "cache_misses": self.cache.misses,
             "cache_evictions": self.cache.evictions,
+            "fold_cache_bytes": self.fold_cache.bytes_used,
+            "fold_cache_entries": len(self.fold_cache),
+            **self.io_stats,
             **self.cas.pack_stats(),
             **self.cas.stats,
         }

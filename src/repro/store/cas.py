@@ -19,6 +19,19 @@ Two placement tiers, mirroring git's loose-object/packfile split:
 every mutation (the directory scans they replaced were O(n) per call).
 Refcounts persist on ``incref``/``decref`` so a crash between a decref and
 the next ``gc()`` can neither leak nor double-free objects.
+
+Throughput paths (DESIGN.md §10):
+
+* writes inside a :meth:`batch` context share one append handle per pack
+  and fsync once when the outermost batch exits (the commit point) instead
+  of reopening the pack file per record;
+* reads are backed by a pooled-``mmap`` view cache — ``get_view`` returns a
+  zero-copy ``memoryview`` into the mapped pack/loose file and
+  ``get_tensor`` decodes npy payloads with ``np.frombuffer`` straight off
+  the map (no intermediate ``bytes``). Pack files are append-only and pack
+  ids are never reused, so a view can only go stale by the file *growing*,
+  which a remap-on-demand check handles; files unlinked by gc/compaction
+  stay readable through any live mapping (POSIX semantics).
 """
 
 from __future__ import annotations
@@ -26,16 +39,46 @@ from __future__ import annotations
 import contextlib
 import io
 import json
+import mmap
 import os
 import struct
 import threading
-from typing import Any, Dict, List, Optional, Tuple
+from collections import OrderedDict
+from typing import Any, Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
 
 from repro.common.hashing import bytes_hash, tensor_hash
 
 _REC_HEAD = struct.Struct("<HI")  # (keylen, datalen)
+_MMAP_POOL_MAX = 64  # mapped files kept open; evicted maps stay valid for
+                     # outstanding views (the arrays keep the mmap alive)
+
+
+def _tensor_from_npy_view(view: memoryview) -> Optional[np.ndarray]:
+    """Decode an npy stream as a zero-copy array over ``view``.
+
+    Returns a read-only array aliasing the view's buffer, or None when the
+    payload needs the copying loader (Fortran order / unsupported header).
+    Read-only is load-bearing: the buffer may be a shared mmap of a pack
+    file — writes through an aliasing array would corrupt the store."""
+    buf = io.BytesIO(bytes(view[:512]))  # header only; payload stays mapped
+    try:
+        version = np.lib.format.read_magic(buf)
+        np.lib.format._check_version(version)
+        shape, fortran, dtype = np.lib.format._read_array_header(buf, version)
+    except Exception:
+        return None
+    if fortran or dtype.hasobject:
+        return None
+    offset = buf.tell()
+    count = int(np.prod(shape, dtype=np.int64)) if shape else 1
+    if offset + count * dtype.itemsize > len(view):
+        return None
+    arr = np.frombuffer(view, dtype=dtype, count=count, offset=offset)
+    arr = arr.reshape(shape)
+    arr.flags.writeable = False
+    return arr
 
 
 def ledger_key(test_hash: str, manifest_key: str) -> str:
@@ -60,7 +103,7 @@ class CAS:
         self._lock = threading.RLock()
         self._defer_persist = 0
         self.stats = {"puts": 0, "gets": 0, "dedup_hits": 0, "bytes_written": 0,
-                      "bytes_deduped": 0}
+                      "bytes_deduped": 0, "zero_copy_gets": 0, "fsyncs": 0}
         # pack state: key -> (pack_id, offset, length); offsets point at data
         self._pack_index: Dict[str, Tuple[int, int, int]] = {}
         self._pack_sizes: Dict[int, int] = {}   # pack_id -> bytes on disk
@@ -69,6 +112,11 @@ class CAS:
         # O(1) accounting counters
         self._object_count = 0
         self._physical_bytes = 0
+        # batched-write state: open append handles, live only inside batch()
+        self._batch_depth = 0
+        self._batch_handles: Dict[int, Any] = {}
+        # pooled mmap views keyed by file path -> (mmap, mapped_size)
+        self._mmap_pool: "OrderedDict[str, Tuple[mmap.mmap, int]]" = OrderedDict()
         if root is not None:
             os.makedirs(os.path.join(root, "objects"), exist_ok=True)
             os.makedirs(os.path.join(root, "packs"), exist_ok=True)
@@ -181,28 +229,83 @@ class CAS:
                 or os.path.exists(self._obj_path(key)))
 
     def _write_loose(self, key: str, data: bytes) -> None:
-        tmp = self._obj_path(key) + ".tmp"
+        path = self._obj_path(key)
+        tmp = path + ".tmp"
         with open(tmp, "wb") as f:
             f.write(data)
-        os.replace(tmp, self._obj_path(key))
+            # fsync BEFORE the rename: os.replace is atomic for the name but
+            # not for the bytes — without this a crash can publish a
+            # truncated object under its final (content-addressed!) key
+            f.flush()
+            os.fsync(f.fileno())
+            self.stats["fsyncs"] += 1
+        os.replace(tmp, path)
+        # the rename swapped the inode: a pooled map of the old file would
+        # serve stale bytes (matters for overwrite-in-place, e.g. a forced
+        # diag ledger re-record whose payload crossed the pack threshold)
+        with self._lock:
+            self._mmap_pool.pop(path, None)
         self._physical_bytes += len(data)
+
+    def _pack_handle(self, pid: int):
+        """Append handle for ``pid``, cached for the duration of a batch."""
+        f = self._batch_handles.get(pid)
+        if f is None:
+            f = self._batch_handles[pid] = open(self._pack_path(pid), "ab")
+        return f
 
     def _write_packed(self, key: str, data: bytes) -> None:
         pid = self._next_pack
-        path = self._pack_path(pid)
         size = self._pack_sizes.get(pid, 0)
         if size and size >= self.pack_max_bytes:
             pid = self._next_pack = self._next_pack + 1
-            path = self._pack_path(pid)
             size = 0
         kb = key.encode()
         record = _REC_HEAD.pack(len(kb), len(data)) + kb + data
-        with open(path, "ab") as f:
+        if self._batch_depth > 0:
+            f = self._pack_handle(pid)
             f.write(record)
+            f.flush()  # reach the OS so concurrent readers/mmaps see it;
+            # durability still waits for the single fsync at batch exit
+        else:
+            with open(self._pack_path(pid), "ab") as f:
+                f.write(record)
         self._pack_index[key] = (pid, size + _REC_HEAD.size + len(kb),
                                  len(data))
         self._pack_sizes[pid] = size + len(record)
         self._physical_bytes += len(record)
+
+    @contextlib.contextmanager
+    def batch(self):
+        """Buffered-append window: packed writes share one handle per pack
+        and are fsynced ONCE when the outermost batch exits (the commit
+        point). Without it every packed record pays an open/close — the
+        dominant syscall cost of a many-object commit. Loose objects keep
+        their own per-file fsync (they are published by rename and must be
+        durable *before* the name exists). Reentrant and thread-shared:
+        EVERY batch exit fsyncs the open handles — each exiting commit is a
+        durability point even while other batches overlap — and the last
+        exit also closes them."""
+        with self._lock:
+            self._batch_depth += 1
+        try:
+            yield self
+        finally:
+            with self._lock:
+                self._batch_depth -= 1
+                for f in self._batch_handles.values():
+                    f.flush()
+                    os.fsync(f.fileno())
+                    self.stats["fsyncs"] += 1
+                if self._batch_depth == 0:
+                    for f in self._batch_handles.values():
+                        f.close()
+                    self._batch_handles.clear()
+
+    def write_batch(self, items: Iterable[Tuple[str, bytes]]) -> List[str]:
+        """Land many objects through one buffered batch; returns their keys."""
+        with self.batch():
+            return [self.put_bytes(data, key=key) for key, data in items]
 
     def put_bytes(self, data: bytes, key: Optional[str] = None,
                   overwrite: bool = False) -> str:
@@ -251,18 +354,102 @@ class CAS:
             self.refcounts[key] = self.refcounts.get(key, 0) + 1
             return key
 
-    def get_bytes(self, key: str) -> bytes:
+    # -- pooled mmap views -------------------------------------------------------
+    def _map_file(self, path: str, need_end: int) -> Optional[mmap.mmap]:
+        """Shared read-only map of ``path`` covering at least ``need_end``.
+
+        Maps are pooled (LRU) and remapped when the file has grown past the
+        mapped size — pack files are append-only, so stale maps are only
+        ever too *short*, never wrong. Returns None when the file cannot be
+        mapped (missing, empty) — callers fall back to plain reads."""
+        with self._lock:
+            entry = self._mmap_pool.get(path)
+            if entry is not None and entry[1] >= need_end:
+                self._mmap_pool.move_to_end(path)
+                return entry[0]
+            try:
+                with open(path, "rb") as f:
+                    size = os.fstat(f.fileno()).st_size
+                    if size < need_end or size == 0:
+                        return None
+                    mm = mmap.mmap(f.fileno(), size, access=mmap.ACCESS_READ)
+            except (OSError, ValueError):
+                return None
+            # dropping an evicted/replaced map only releases OUR reference;
+            # arrays holding views keep the mapping alive until they die
+            self._mmap_pool[path] = (mm, size)
+            self._mmap_pool.move_to_end(path)
+            while len(self._mmap_pool) > _MMAP_POOL_MAX:
+                self._mmap_pool.popitem(last=False)
+            return mm
+
+    def get_view(self, key: str) -> memoryview:
+        """Zero-copy read: a ``memoryview`` over the object's stored bytes.
+
+        Backed by the pooled mmap for on-disk objects; raises ``KeyError``
+        for missing keys (same contract as :meth:`get_bytes`)."""
         self.stats["gets"] += 1
         if self.root is None:
-            return self._mem[key]
+            try:
+                return memoryview(self._mem[key])
+            except KeyError:
+                raise KeyError(f"no object {key!r} in CAS")
         entry = self._pack_index.get(key)
         if entry is not None:
             pid, off, length = entry
-            with open(self._pack_path(pid), "rb") as f:
-                f.seek(off)
-                return f.read(length)
-        with open(self._obj_path(key), "rb") as f:
-            return f.read()
+            mm = self._map_file(self._pack_path(pid), off + length)
+            if mm is not None:
+                self.stats["zero_copy_gets"] += 1
+                return memoryview(mm)[off:off + length]
+            return memoryview(self._read_packed(pid, off, length))
+        path = self._obj_path(key)
+        size = os.path.getsize(path) if os.path.exists(path) else 0
+        mm = self._map_file(path, size) if size else None
+        if mm is not None:
+            self.stats["zero_copy_gets"] += 1
+            return memoryview(mm)
+        return memoryview(self._read_loose(key))
+
+    def _read_packed(self, pid: int, off: int, length: int) -> bytes:
+        with open(self._pack_path(pid), "rb") as f:
+            f.seek(off)
+            return f.read(length)
+
+    def _read_loose(self, key: str) -> bytes:
+        try:
+            with open(self._obj_path(key), "rb") as f:
+                return f.read()
+        except FileNotFoundError:
+            # normalize the miss path: a missing object is a KeyError no
+            # matter which placement tier it would have lived in
+            raise KeyError(f"no object {key!r} in CAS")
+
+    def get_bytes(self, key: str) -> bytes:
+        """Object bytes (owned copy). Served off the pooled mmap when the
+        file is mapped — repeated small reads skip the open/read/close
+        syscall triple that dominates deep-chain checkouts."""
+        self.stats["gets"] += 1
+        if self.root is None:
+            try:
+                return self._mem[key]
+            except KeyError:
+                raise KeyError(f"no object {key!r} in CAS")
+        entry = self._pack_index.get(key)
+        if entry is not None:
+            pid, off, length = entry
+            mm = self._map_file(self._pack_path(pid), off + length)
+            if mm is not None:
+                return mm[off:off + length]
+            return self._read_packed(pid, off, length)
+        path = self._obj_path(key)
+        try:
+            size = os.path.getsize(path)
+        except OSError:
+            raise KeyError(f"no object {key!r} in CAS")
+        mm = self._map_file(path, size) if size else None
+        if mm is not None:
+            return mm[:size]
+        return self._read_loose(key)
 
     def size(self, key: str) -> int:
         if self.root is None:
@@ -289,7 +476,21 @@ class CAS:
         return self.put_bytes(buf.getvalue(), key=key)
 
     def get_tensor(self, key: str) -> np.ndarray:
-        return np.load(io.BytesIO(self.get_bytes(key)), allow_pickle=False)
+        """Decode a stored npy payload, zero-copy where possible.
+
+        The returned array aliases the pooled mmap (read-only,
+        ``np.frombuffer`` over the payload view) — no intermediate ``bytes``
+        object, no memcpy. Falls back to a copying ``np.load`` for payloads
+        frombuffer can't express (Fortran order, object dtypes, odd
+        headers)."""
+        view = self.get_view(key)
+        try:
+            arr = _tensor_from_npy_view(view)
+            if arr is not None:
+                return arr
+        except Exception:
+            pass
+        return np.load(io.BytesIO(bytes(view)), allow_pickle=False)
 
     # -- refcounting / GC --------------------------------------------------------
     def incref(self, key: str) -> None:
@@ -384,6 +585,10 @@ class CAS:
             # cannot resurrect its dead records via a tail scan)...
             self._persist_pack_index()
             # ...then unlink and drop it from the books
+            stale = self._batch_handles.pop(pid, None)
+            if stale is not None:
+                stale.close()
+            self._mmap_pool.pop(path, None)  # live views keep the map alive
             if os.path.exists(path):
                 os.remove(path)
             self._physical_bytes -= size

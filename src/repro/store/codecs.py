@@ -134,6 +134,25 @@ CODECS: Dict[str, Codec] = {
     "sparse": SparseCodec(),
 }
 
+_TUNED: Dict[tuple, Codec] = {}
 
-def get_codec(name: str) -> Codec:
-    return CODECS[name]
+
+def get_codec(name: str, preset: int = None) -> Codec:
+    """Codec by name, optionally tuned.
+
+    ``preset`` selects the LZMA preset (0 fastest … 9 strongest) or the
+    zlib level. Decoding is container-self-describing for both, so the
+    manifest only records the codec *name* — readers never need to know the
+    preset the writer used. Tuned instances are cached (codec objects are
+    stateless)."""
+    if preset is None:
+        return CODECS[name]
+    key = (name, preset)
+    if key not in _TUNED:
+        if name == "lzma":
+            _TUNED[key] = LZMACodec(preset=preset)
+        elif name == "zlib":
+            _TUNED[key] = ZlibCodec(level=preset)
+        else:
+            _TUNED[key] = CODECS[name]  # preset is a no-op for this codec
+    return _TUNED[key]

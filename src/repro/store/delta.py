@@ -121,6 +121,13 @@ class CompressResult:
     test_deltas: Dict[str, float]
     raw_bytes: int
     compressed_bytes: int
+    # content hashes of reconstructed delta params, precomputed on the
+    # pipeline's worker threads (commit reuses them instead of re-hashing)
+    param_hashes: Dict[str, str] = dataclasses.field(default_factory=dict)
+    # open-segment fold states of the reconstructed params (opaque to this
+    # module; the store installs them in its FoldCache at commit so the
+    # NEXT commit's parent materialization is pure cache hits)
+    fold_states: Dict[str, object] = dataclasses.field(default_factory=dict)
 
     @property
     def ratio(self) -> float:
@@ -195,13 +202,75 @@ def delta_compression(m2: ModelArtifact, m1: ModelArtifact,
                           total_raw, compressed_total)
 
 
+def host_snapshot(p1: np.ndarray, p2: np.ndarray, eps: float
+                  ) -> Tuple[np.ndarray, int, bool]:
+    """Numpy twin of ``ops.snapshot_fused`` (sans fingerprint).
+
+    Returns ``(q int8|int32, n_zero, narrow)``, bit-identical to the jax
+    ref kernel (both compute ``floor(f32(p1-p2)/f32(scale) + 0.5)`` with
+    correctly-rounded f32 ops; asserted in ``tests/test_pipeline.py``) but
+    with zero dispatch overhead — on CPU hosts the per-call jit dispatch
+    dominates the arithmetic for typical layer-sized tensors, so the commit
+    pipeline uses this path when no accelerator backend is configured."""
+    from repro.kernels.ref import quant_scale
+    scale = np.float32(quant_scale(eps))
+    d = np.asarray(p1, dtype=np.float32) - np.asarray(p2, dtype=np.float32)
+    q32 = np.floor(d / scale + np.float32(0.5)).astype(np.int32)
+    nz = int((q32 == 0).sum())
+    q8 = np.clip(q32, -127, 127)
+    if bool((q32 == q8).all()):
+        return q8.astype(np.int8), nz, True
+    return q32, nz, False
+
+
+def host_dequant(parent_value: np.ndarray, q: np.ndarray, eps: float,
+                 out_dtype=None) -> np.ndarray:
+    """Host-side dequant-apply: ``p2' = f32(p1) - f32(q) * f32(scale)``.
+
+    Bit-identical to ``ops.dequant_apply(..., backend="ref")`` — both are
+    single correctly-rounded f32 multiply+subtract per element (JAX's weak
+    typing rounds the python-float scale to f32 exactly like the explicit
+    ``np.float32`` here; ``tests/test_pipeline.py`` asserts the identity) —
+    but with zero dispatch overhead, which is what the checkout/commit hot
+    loops need on CPU hosts. Non-f32 ``out_dtype`` casts go through jax
+    (ml_dtypes coverage, e.g. bf16) to keep rounding identical to the
+    device path."""
+    from repro.kernels.ref import quant_scale
+    scale = np.float32(quant_scale(eps))
+    out = (np.asarray(parent_value, dtype=np.float32)
+           - np.asarray(q, dtype=np.float32) * scale)
+    dt = np.dtype(out_dtype) if out_dtype is not None else np.float32
+    if dt == np.float32:
+        return out
+    try:
+        return out.astype(dt)
+    except TypeError:
+        return np.asarray(ops.dequant_apply(parent_value, q, eps=eps,
+                                            backend="ref",
+                                            out_dtype=out_dtype))
+
+
+def decode_q(delta_or_entry, blob) -> np.ndarray:
+    """Decode one delta blob to its quantized array (reshaped).
+
+    The stored dtype (int8 when the fused kernel narrowed) is preserved —
+    int8→f32 and int8→int32-accum conversions are exact, so downstream
+    dequant/fold never needs the 4x-larger int32 copy. ``blob`` may be any
+    buffer (bytes or a zero-copy CAS view)."""
+    codec = delta_or_entry.codec
+    shape = tuple(delta_or_entry.shape)
+    qdtype = getattr(delta_or_entry, "qdtype", "int32")
+    n = int(np.prod(shape)) if shape else 1
+    return get_codec(codec).decode(blob, n, dtype=qdtype).reshape(shape)
+
+
 def decompress_param(parent_value: np.ndarray, delta: ParamDelta,
                      backend: Optional[str] = None) -> np.ndarray:
     """Invert one ParamDelta given the materialized parent tensor."""
-    cod = get_codec(delta.codec)
-    n = int(np.prod(delta.shape)) if delta.shape else 1
-    q = cod.decode(delta.blob, n, dtype=delta.qdtype).astype(np.int32)
-    q = q.reshape(delta.shape)
+    q = decode_q(delta, delta.blob)
+    if backend is None or backend == "ref":
+        return host_dequant(parent_value, q, eps=delta.eps,
+                            out_dtype=delta.dtype).reshape(delta.shape)
     out = ops.dequant_apply(np.asarray(parent_value), q, eps=delta.eps,
                             backend=backend, out_dtype=delta.dtype)
     return np.asarray(out).reshape(delta.shape).astype(delta.dtype)

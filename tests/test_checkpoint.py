@@ -64,7 +64,13 @@ def test_delta_compression_across_steps(tmp_path):
 
 
 def test_verification_detects_corruption(tmp_path):
-    cm = CheckpointManager(str(tmp_path), model_name="m", delta_enabled=False)
+    from repro.store import ArtifactStore
+    # small pack threshold so the weight tensor lands loose (the throughput
+    # default packs objects this small; corruption should hit ONE object)
+    cm = CheckpointManager(
+        str(tmp_path), model_name="m", delta_enabled=False,
+        store=ArtifactStore(root=str(tmp_path), t_thr=float("inf"),
+                            delta_enabled=False, pack_threshold=1024))
     cm.save(0, _state(0), blocking=True)
     # flip bytes in the largest object (the weight tensor)
     objdir = os.path.join(str(tmp_path), "objects")

@@ -42,6 +42,27 @@ def test_dequant_apply_kernel_matches_oracle(shape, dtype):
                                rtol=1e-6, atol=1e-6)
 
 
+@pytest.mark.parametrize("shape", [(100,), (257, 33), (128, 128), (3, 5, 7)])
+@pytest.mark.parametrize("k", [1, 3, 6])
+def test_chain_apply_kernel_matches_oracle(shape, k):
+    """Fused chain-apply == base - sum(q)*scale (DESIGN.md §10.2)."""
+    rng = np.random.default_rng(hash((shape, k)) % 2**31)
+    base = jnp.asarray(rng.normal(size=shape), dtype=jnp.float32)
+    qs = [rng.integers(-100, 100, size=shape).astype(np.int8)
+          for _ in range(k)]
+    out_ref = ops.chain_apply(base, qs, backend="ref")
+    out_pal = ops.chain_apply(base, qs, backend="interpret")
+    np.testing.assert_allclose(np.asarray(out_ref), np.asarray(out_pal),
+                               rtol=1e-6, atol=1e-6)
+    # the fold identity vs single dequant of the exact int32 sum
+    qsum = np.zeros(shape, np.int32)
+    for q in qs:
+        qsum += q
+    single = ops.dequant_apply(base, qsum, backend="ref",
+                               out_dtype="float32")
+    np.testing.assert_array_equal(np.asarray(out_ref), np.asarray(single))
+
+
 @pytest.mark.parametrize("shape", SHAPES)
 @pytest.mark.parametrize("dtype", DTYPES + [jnp.int32], ids=str)
 def test_fingerprint_kernel_matches_oracle(shape, dtype):

@@ -417,7 +417,10 @@ def test_fsck_detects_corruption_and_drift(tmp_path):
     roots = _roots(g)
     assert g.store.fsck(roots)["ok"]
 
-    # bit-rot a loose object
+    # bit-rot a loose object (force one below the pack threshold first —
+    # the throughput default packs everything this small)
+    g.store.cas.pack_threshold = 16
+    g.store.cas.put_bytes(os.urandom(64))
     objdir = os.path.join(g.path, "objects")
     victim = sorted(os.listdir(objdir))[0]
     path = os.path.join(objdir, victim)

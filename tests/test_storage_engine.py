@@ -84,6 +84,7 @@ def test_single_param_access_skips_siblings(tmp_path):
     refs, final = _build_chain(store, depth)
 
     store.cache.clear()
+    store.fold_cache.clear()
     store.reset_io_stats()
     art = store.load_artifact(refs[-1])
     assert isinstance(art.params, LazyParams)
@@ -92,17 +93,21 @@ def test_single_param_access_skips_siblings(tmp_path):
     value = art.params["L0/w"]
     np.testing.assert_allclose(value, final.params["L0/w"], atol=5e-4)
 
-    # Only L0/w's chain was touched: one tensor per link, nothing else.
+    # Only L0/w's chain was touched — and the whole same-eps chain FOLDED
+    # into one accumulated int32 delta + a single dequant (DESIGN.md §10.2):
+    # the only tensors produced are the chain base and the final value.
     tensor_bytes = np.asarray(final.params["L0/w"]).nbytes
     stats = store.io_stats
-    assert stats["tensors_materialized"] == depth + 1
-    assert stats["chain_hops"] == depth
-    # peak bytes O(tensor x depth), NOT O(model x depth) like the old
-    # recursive loader (which materializes every FULL ancestor artifact)
-    assert stats["bytes_materialized"] == tensor_bytes * (depth + 1)
+    assert stats["chain_hops"] == depth       # every blob decoded once
+    assert stats["dequant_calls"] == 1        # ...but ONE dequant applies
+    assert stats["hops_folded"] == depth - 1
+    assert stats["tensors_materialized"] == 2
+    assert stats["bytes_materialized"] == tensor_bytes * 2
+    # O(tensor), NOT O(model x depth) like the old recursive loader
     assert stats["bytes_materialized"] < final.nbytes() * (depth + 1)
     # sibling tensors never entered the cache
     assert all(k[1] == "L0/w" for k in store.cache._entries)
+    assert all(k[1] == "L0/w" for k in store.fold_cache._entries)
 
 
 def test_lazy_nbytes_and_hashes_without_materialization(tmp_path):
