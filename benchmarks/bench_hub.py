@@ -1,0 +1,134 @@
+"""Hub throughput: HTTP transport vs LocalTransport on one pool (DESIGN.md §11).
+
+Boots a real hub daemon on a loopback ephemeral port, then runs the same
+collaboration session twice — once through ``LocalTransport`` (directory
+peer) and once through ``HttpTransport`` — reporting wall time, bytes and
+dedup per step plus the wire invariants:
+
+* push/clone over HTTP is **bit-identical** to the LocalTransport round
+  trip (same lineage etag, same object key set, same stored params);
+* an unchanged re-push transfers zero objects over either transport;
+* both receiving repos pass fsck with exact refcounts.
+
+Run directly (CI hub-smoke job):
+``PYTHONPATH=src:. python -m benchmarks.bench_hub`` — exits non-zero if an
+invariant fails.
+"""
+
+from __future__ import annotations
+
+import tempfile
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.pools import g2_adaptation
+from repro.core import LineageGraph
+from repro.core.auto import auto_insert
+from repro.hub import HubApp, start_in_thread
+from repro.remote import (HttpTransport, LocalTransport, RemoteState,
+                          lineage_etag, pull, push)
+from repro.store import ArtifactStore
+
+
+def _seed(path: str, pool) -> LineageGraph:
+    g = LineageGraph(path=path,
+                     store=ArtifactStore(root=path, t_thr=float("inf")))
+    for name, artifact in pool:
+        auto_insert(g, artifact, name)
+    return g
+
+
+def _row(transport: str, step: str, report, elapsed: float) -> Dict:
+    return {"transport": transport, "step": step,
+            "objects_total": report.objects_total,
+            "objects_transferred": report.objects_transferred,
+            "bytes_transferred": report.bytes_transferred,
+            "dedup_ratio": round(report.dedup_ratio, 4),
+            "seconds": round(elapsed, 4)}
+
+
+def _session(name: str, g: LineageGraph, transport, state: RemoteState,
+             dst_dir: str) -> List[Dict]:
+    rows = []
+    for step in ("initial push", "unchanged re-push"):
+        t0 = time.perf_counter()
+        rep = push(g, transport, state=state)
+        rows.append(_row(name, step, rep, time.perf_counter() - t0))
+    g2 = LineageGraph(path=dst_dir, store=ArtifactStore(root=dst_dir))
+    t0 = time.perf_counter()
+    rep = pull(g2, transport, state=RemoteState(dst_dir, "origin"))
+    rows.append(_row(name, "fresh pull (clone)", rep,
+                     time.perf_counter() - t0))
+    assert rows[1]["objects_transferred"] == 0, \
+        f"{name}: unchanged re-push must transfer zero objects"
+    for node_name in g.nodes:
+        a = g.store.load_artifact(g.nodes[node_name].artifact_ref)
+        b = g2.store.load_artifact(g2.nodes[node_name].artifact_ref)
+        for k in a.params:
+            np.testing.assert_array_equal(np.asarray(a.params[k]),
+                                          np.asarray(b.params[k]))
+    assert g2.store.fsck([n.artifact_ref for n in g2.nodes.values()
+                          if n.artifact_ref])["ok"], f"{name}: clone fsck"
+    return rows
+
+
+def run(scale: int = 1) -> List[Dict]:
+    pool, _, _ = g2_adaptation(scale=scale)
+    rows: List[Dict] = []
+    with tempfile.TemporaryDirectory() as tmp:
+        g = _seed(f"{tmp}/src", pool)
+
+        rows += _session("local", g, LocalTransport(f"{tmp}/local-remote"),
+                         RemoteState(g.path, "local"), f"{tmp}/local-clone")
+
+        app = HubApp(f"{tmp}/hub-remote")
+        server, _ = start_in_thread(app)
+        try:
+            transport = HttpTransport(server.url)
+            rows += _session("http", g, transport,
+                             RemoteState(g.path, "hub"), f"{tmp}/http-clone")
+            # wire invariant: both remotes ended in the same state
+            local_doc = LocalTransport(f"{tmp}/local-remote").fetch_lineage()
+            hub_doc, _ = app.lineage()
+            assert lineage_etag(hub_doc) == lineage_etag(local_doc), \
+                "HTTP push produced a different lineage document"
+            local_keys = sorted(
+                ArtifactStore(root=f"{tmp}/local-remote").cas.keys())
+            assert sorted(app.store.cas.keys()) == local_keys, \
+                "HTTP push produced a different object set"
+            assert app.fsck()["ok"], "hub-side fsck failed"
+            rows.append({"transport": "http", "step": "server stats",
+                         **{k: v for k, v in transport.server_stats().items()
+                            if k in ("requests", "bytes_in", "bytes_out",
+                                     "objects_received", "objects_served")}})
+        finally:
+            server.shutdown()
+            server.server_close()
+    return rows
+
+
+def main() -> List[Dict]:
+    rows = run()
+    header = (f"{'transport':<9} {'step':<20} {'objects':>12} "
+              f"{'bytes':>12} {'dedup':>7} {'s':>8}")
+    print(header)
+    print("-" * len(header))
+    for r in rows:
+        if "objects_total" not in r:
+            print(f"{r['transport']:<9} {r['step']:<20} "
+                  + ", ".join(f"{k}={v}" for k, v in r.items()
+                              if k not in ("transport", "step")))
+            continue
+        objs = f"{r['objects_transferred']}/{r['objects_total']}"
+        print(f"{r['transport']:<9} {r['step']:<20} {objs:>12} "
+              f"{r['bytes_transferred']:>12} {r['dedup_ratio']:>7.2%} "
+              f"{r['seconds']:>8.3f}")
+    print("http == local bit-identity: OK; zero-object re-push: OK; "
+          "fsck: OK")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

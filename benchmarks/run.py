@@ -112,6 +112,19 @@ def main() -> None:
          f"moved={incr['objects_transferred']}/{incr['objects_total']}")
 
     print("=" * 72)
+    print("§11 hub — HTTP transport vs LocalTransport (bit-identity + wire cost)")
+    print("=" * 72)
+    from benchmarks import bench_hub
+    rows = bench_hub.main()
+    http_push = next(r for r in rows if r["transport"] == "http"
+                     and r["step"] == "initial push")
+    local_push = next(r for r in rows if r["transport"] == "local"
+                      and r["step"] == "initial push")
+    _csv("hub_http_push", http_push["seconds"] * 1e6,
+         f"http_over_local={http_push['seconds']/max(local_push['seconds'], 1e-9):.2f}x,"
+         f"bytes={http_push['bytes_transferred']}")
+
+    print("=" * 72)
     print("Storage kernels — CPU wall-time + TPU roofline bound")
     print("=" * 72)
     rows = bench_kernels.main()

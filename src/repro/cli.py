@@ -27,24 +27,37 @@ Global storage knobs:
                                 (0 fastest ... 9 strongest; default 0 — see
                                 bench_compression's preset sweep)
 
-Collaboration commands (paper §5; DESIGN.md §8):
-    remote add <name> <url>     register a peer repository (url = directory)
+Collaboration commands (paper §5; DESIGN.md §8, §11):
+    remote add <name> <url>     register a peer repository (url = directory
+                                or an http(s):// hub daemon)
     remote list                 configured remotes
     remote remove <name>        unregister a remote
     push <remote> [--filter P] [--force]
                                 ship the (fnmatch-filtered) lineage subgraph:
                                 have/want negotiation transfers only objects
                                 the remote is missing; a lineage conflict
-                                aborts before publish unless --force
+                                aborts before publish unless --force; a
+                                concurrent pusher is absorbed via the
+                                409/etag retry loop (DESIGN.md §11.3)
     pull <remote> [--filter P]  fetch the (filtered) remote subgraph and
                                 three-way merge it into the local lineage;
                                 divergent models auto-merge when the §5
                                 decision tree allows
-    clone <url> <dest>          materialize a remote repo into a fresh
-                                directory (sets up 'origin' tracking)
+    clone <url> <dest>          materialize a remote repo (directory or hub
+                                url) into a fresh directory (sets up
+                                'origin' tracking)
     fsck                        integrity pass: re-hash all CAS objects,
                                 verify manifest closures, report dangling
                                 refs / refcount drift / stale transfers
+
+Hub commands (DESIGN.md §11; 'hub' namespace — the bare name 'serve' is
+reserved for the inference engine in repro/serve):
+    hub serve [--host H] [--port N] [--token T] [--allow-quarantined]
+                                serve THIS repo (-C) to HTTP clients:
+                                threaded daemon, optimistic-swap publishes,
+                                zero-copy ranged object reads, resumable
+                                journalled transfers
+    hub stats <url>             live counters of a running hub daemon
 
 Diagnostics commands (paper §4; DESIGN.md §9):
     diag run [node] [--pattern P] [--match-glob] [--jobs N] [--force]
@@ -66,6 +79,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 
 import numpy as np
@@ -80,69 +94,96 @@ def _graph(repo: str, lzma_preset=None) -> LineageGraph:
                                             lzma_preset=lzma_preset))
 
 
-def main(argv=None) -> int:
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(prog="mgit", description=__doc__,
                                  formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("-C", dest="repo", default=".", help="lineage repo directory")
     ap.add_argument("--lzma-preset", dest="lzma_preset", type=int,
                     default=None, metavar="N",
                     help="LZMA preset for new delta blobs (0..9; default 0)")
+    ap.add_argument("--dump-docs", action="store_true",
+                    help="print the generated CLI reference (docs/cli.md) "
+                         "and exit")
     sub = ap.add_subparsers(dest="cmd", required=True)
 
-    sub.add_parser("log")
-    p = sub.add_parser("show")
-    p.add_argument("node")
-    p = sub.add_parser("diff")
-    p.add_argument("a")
-    p.add_argument("b")
+    sub.add_parser("log", help="render the lineage graph")
+    p = sub.add_parser("show", help="node details (parents, versions, storage)")
+    p.add_argument("node", help="lineage node name (e.g. bert@v2)")
+    p = sub.add_parser("diff",
+                       help="structural/contextual diff between two models")
+    p.add_argument("a", help="first node name")
+    p.add_argument("b", help="second node name")
     p.add_argument("--mode", default="contextual",
-                   choices=["structural", "contextual"])
-    p = sub.add_parser("add-edge")
-    p.add_argument("x")
-    p.add_argument("y")
-    p = sub.add_parser("add-version-edge")
-    p.add_argument("x")
-    p.add_argument("y")
-    p = sub.add_parser("remove-node")
-    p.add_argument("x")
-    p = sub.add_parser("test")
-    p.add_argument("node", nargs="?", default=None)
+                   choices=["structural", "contextual"],
+                   help="matching mode (paper §3.2)")
+    p = sub.add_parser("add-edge", help="add a provenance edge")
+    p.add_argument("x", help="parent node")
+    p.add_argument("y", help="child node")
+    p = sub.add_parser("add-version-edge", help="add a versioning edge")
+    p.add_argument("x", help="earlier version node")
+    p.add_argument("y", help="later version node")
+    p = sub.add_parser("remove-node", help="remove a node and its subtree")
+    p.add_argument("x", help="node to remove")
+    p = sub.add_parser("test",
+                       help="run registered tests via a graph traversal")
+    p.add_argument("node", nargs="?", default=None,
+                   help="traversal start (default: whole graph)")
     grp = p.add_mutually_exclusive_group()
     grp.add_argument("--re", dest="pattern", default=None,
                      help="regex test-name filter")
     grp.add_argument("--glob", dest="glob_pattern", default=None,
                      help="fnmatch glob test-name filter")
-    p = sub.add_parser("param")
-    p.add_argument("node")
-    p.add_argument("key")
-    p = sub.add_parser("checkout")
-    p.add_argument("node")
+    p = sub.add_parser("param",
+                       help="materialize ONE parameter (lazy checkout)")
+    p.add_argument("node", help="lineage node name")
+    p.add_argument("key", help="flat parameter key (layer/param)")
+    p = sub.add_parser("checkout",
+                       help="batched full-model materialization "
+                            "(chain-folding engine, DESIGN.md §10)")
+    p.add_argument("node", help="lineage node name")
     p.add_argument("--jobs", type=int, default=None,
                    help="decode worker threads (default: store io_workers)")
-    sub.add_parser("stats")
-    sub.add_parser("gc")
-    p = sub.add_parser("remote")
-    p.add_argument("action", choices=["add", "list", "remove"])
-    p.add_argument("name", nargs="?")
-    p.add_argument("url", nargs="?")
-    p = sub.add_parser("push")
-    p.add_argument("remote")
-    p.add_argument("--filter", default=None)
-    p.add_argument("--force", action="store_true")
+    sub.add_parser("stats", help="storage statistics (ratio, dedup, caches)")
+    sub.add_parser("gc", help="collect unreferenced objects")
+    p = sub.add_parser("remote", help="manage peer repositories")
+    p.add_argument("action", choices=["add", "list", "remove"],
+                   help="what to do with the remote registry")
+    p.add_argument("name", nargs="?", help="remote name (add/remove)")
+    p.add_argument("url", nargs="?",
+                   help="peer directory or http(s):// hub url (add)")
+    p = sub.add_parser("push",
+                       help="ship the lineage subgraph to a remote "
+                            "(DESIGN.md §8, §11.3)")
+    p.add_argument("remote", help="remote name, directory, or hub url")
+    p.add_argument("--filter", default=None,
+                   help="fnmatch node filter for a shallow push")
+    p.add_argument("--force", action="store_true",
+                   help="publish even on a lineage conflict (keeps pushed "
+                        "versions)")
     p.add_argument("--include-quarantined", action="store_true",
                    help="ship nodes a test gate quarantined (excluded by default)")
-    p = sub.add_parser("pull")
-    p.add_argument("remote")
-    p.add_argument("--filter", default=None)
-    p = sub.add_parser("clone")
-    p.add_argument("url")
-    p.add_argument("dest")
-    p.add_argument("--filter", default=None)
-    sub.add_parser("fsck")
-    p = sub.add_parser("diag")
-    p.add_argument("action", choices=["run", "blame", "history", "gate-report"])
-    p.add_argument("node", nargs="?", default=None)
-    p.add_argument("test", nargs="?", default=None)
+    p = sub.add_parser("pull",
+                       help="fetch a remote subgraph and three-way merge it")
+    p.add_argument("remote", help="remote name, directory, or hub url")
+    p.add_argument("--filter", default=None,
+                   help="fnmatch node filter for a shallow pull")
+    p = sub.add_parser("clone",
+                       help="materialize a remote repo into a fresh directory")
+    p.add_argument("url", help="peer directory or http(s):// hub url")
+    p.add_argument("dest", help="destination directory (must be fresh)")
+    p.add_argument("--filter", default=None,
+                   help="fnmatch node filter for a shallow clone")
+    sub.add_parser("fsck",
+                   help="integrity pass: re-hash objects, closures, refcounts")
+    p = sub.add_parser("diag",
+                       help="memoized diagnostics: run/blame/history/"
+                            "gate-report (DESIGN.md §9)")
+    p.add_argument("action", choices=["run", "blame", "history", "gate-report"],
+                   help="diagnostics subcommand")
+    p.add_argument("node", nargs="?", default=None,
+                   help="node scope (run) / target node (blame, history)")
+    p.add_argument("test", nargs="?", default=None,
+                   help="test name (blame) / filter (history)")
     p.add_argument("--pattern", default=None, help="test-name filter")
     p.add_argument("--match-glob", action="store_true",
                    help="interpret --pattern as an fnmatch glob (default: regex)")
@@ -154,9 +195,35 @@ def main(argv=None) -> int:
     p.add_argument("--prefetch", action="store_true",
                    help="batch-materialize each model before its tests run "
                         "(chain-folded, threaded checkout; DESIGN.md §10.3)")
+    p = sub.add_parser("hub", help="model-hub daemon (DESIGN.md §11)")
+    p.add_argument("action", choices=["serve", "stats"])
+    p.add_argument("url", nargs="?",
+                   help="hub url (stats action only)")
+    p.add_argument("--host", default="127.0.0.1",
+                   help="bind address for hub serve")
+    p.add_argument("--port", type=int, default=8943,
+                   help="bind port for hub serve (0 picks an ephemeral one)")
+    p.add_argument("--token", default=None,
+                   help="bearer token: required of clients (serve) / sent "
+                        "to the hub (stats; also $MGIT_HUB_TOKEN)")
+    p.add_argument("--allow-quarantined", action="store_true",
+                   help="accept pushed nodes flagged quarantined instead of "
+                        "rejecting them server-side")
+    return ap
 
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    ap = build_parser()
+    if "--dump-docs" in argv:
+        # Intercepted pre-parse: the subcommand argument is required, and
+        # docs generation must not depend on one.
+        print(dump_docs(ap))
+        return 0
     args = ap.parse_args(argv)
 
+    if args.cmd == "hub":
+        return _cmd_hub(args)
     if args.cmd == "clone":  # dest is the repo; don't touch args.repo
         from repro import remote as rm
         report = rm.clone(args.url, args.dest, filter=args.filter)
@@ -325,6 +392,124 @@ def main(argv=None) -> int:
         else:  # gate-report
             print(json.dumps(diag.gate_report(g), indent=1) or "[]")
     return 0
+
+
+def _cmd_hub(args) -> int:
+    """`hub serve` (blocking daemon over -C repo) / `hub stats <url>`."""
+    if args.action == "serve":
+        from repro.hub import HubApp, make_server
+        app = HubApp(args.repo, token=args.token,
+                     allow_quarantined=args.allow_quarantined)
+        server = make_server(app, host=args.host, port=args.port)
+        print(f"mgit hub: serving {app.root} at {server.url}"
+              + (" [token auth]" if app.auth.enabled else ""), flush=True)
+        try:
+            server.serve_forever()
+        except KeyboardInterrupt:
+            pass
+        finally:
+            server.server_close()
+        return 0
+    if not args.url:
+        print("usage: hub stats <url>")
+        return 1
+    from repro.remote.http import HttpTransport
+    print(json.dumps(HttpTransport(args.url, token=args.token).server_stats(),
+                     indent=1))
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# CLI reference generation (docs/cli.md)
+# ---------------------------------------------------------------------------
+
+
+def _action_syntax(action: argparse.Action) -> str:
+    """Deterministic syntax cell for one argparse action (no argparse
+    formatter involved — their output wraps on terminal width, which would
+    make the generated docs drift between environments)."""
+    if not action.option_strings:
+        name = action.metavar or action.dest
+        if action.choices is not None and action.metavar is None:
+            name = "{" + ",".join(str(c) for c in action.choices) + "}"
+        return f"[{name}]" if action.nargs in ("?", "*") else f"<{name}>"
+    opts = ", ".join(action.option_strings)
+    if action.nargs == 0:
+        return f"`{opts}`"
+    metavar = action.metavar or action.dest.replace("-", "_").upper()
+    return f"`{opts} {metavar}`"
+
+
+def _action_desc(action: argparse.Action) -> str:
+    desc = " ".join((action.help or "").split())
+    extras = []
+    if action.choices is not None and action.option_strings:
+        extras.append("one of: " + ", ".join(str(c) for c in action.choices))
+    if (action.option_strings and action.nargs != 0
+            and action.default not in (None, False, argparse.SUPPRESS)):
+        extras.append(f"default: {action.default}")
+    if extras:
+        desc = (desc + " " if desc else "") + "(" + "; ".join(extras) + ")"
+    return desc
+
+
+def dump_docs(ap: argparse.ArgumentParser) -> str:
+    """Render the complete CLI reference from the live argparse tree.
+
+    ``docs/cli.md`` is this function's output verbatim; CI regenerates it
+    and fails on drift, so the reference can never fall behind the code."""
+    sub = next(a for a in ap._actions
+               if isinstance(a, argparse._SubParsersAction))
+    out = [
+        "# mgit — CLI reference",
+        "",
+        "<!-- GENERATED FILE, do not edit by hand.",
+        "     Regenerate: PYTHONPATH=src python -m repro.cli --dump-docs"
+        " > docs/cli.md",
+        "     CI regenerates and diffs this file, failing on drift. -->",
+        "",
+        "Invocation: `python -m repro.cli [global options] <command> [...]`",
+        "",
+        "## Global options",
+        "",
+        "| option | description |",
+        "|---|---|",
+    ]
+    for action in ap._actions:
+        if isinstance(action, (argparse._SubParsersAction,
+                               argparse._HelpAction)):
+            continue
+        out.append(f"| {_action_syntax(action)} | {_action_desc(action)} |")
+    out += ["", "## Commands", ""]
+    for name, parser in sub.choices.items():
+        actions = [a for a in parser._actions
+                   if not isinstance(a, argparse._HelpAction)]
+        positionals = [a for a in actions if not a.option_strings]
+        usage = " ".join(["mgit", name]
+                         + [_action_syntax(a) for a in positionals]
+                         + (["[options]"]
+                            if any(a.option_strings for a in actions)
+                            else []))
+        out += [f"### `{usage}`", ""]
+        help_text = next((a.help for a in sub._choices_actions
+                          if a.dest == name and a.help), None)
+        if help_text:
+            out += [" ".join(help_text.split()), ""]
+        if actions:
+            out += ["| argument | description |", "|---|---|"]
+            for action in actions:
+                out.append(f"| {_action_syntax(action)} "
+                           f"| {_action_desc(action)} |")
+            out.append("")
+    out += [
+        "## Command overview (from `mgit --help`)",
+        "",
+        "```text",
+        (ap.description or "").strip(),
+        "```",
+        "",
+    ]
+    return "\n".join(out)
 
 
 def _register_builtin_probes(g: LineageGraph) -> None:

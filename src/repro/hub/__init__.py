@@ -1,0 +1,20 @@
+"""MGit model hub: a threaded HTTP daemon serving one repository.
+
+The multi-user face of the system (paper §5 collaboration; DESIGN.md §11):
+:class:`HubApp` wraps a repo directory's :class:`ArtifactStore` + lineage
+document with concurrent-push safety (optimistic lineage swap -> HTTP 409),
+server-side quarantine policy and live stats; :mod:`repro.hub.routes`
+exposes it over a small REST surface that
+:class:`repro.remote.http.HttpTransport` speaks from the client side, so
+``push``/``pull``/``clone`` work unchanged against ``http://`` remotes.
+
+Start one with ``mgit hub serve`` or embed via :func:`start_in_thread`.
+"""
+
+from repro.hub.app import HubApp
+from repro.hub.auth import TokenAuth
+from repro.hub.routes import (HubRequestHandler, HubServer, make_server,
+                              start_in_thread)
+
+__all__ = ["HubApp", "TokenAuth", "HubRequestHandler", "HubServer",
+           "make_server", "start_in_thread"]

@@ -1,0 +1,199 @@
+"""HubApp — the model-hub daemon's repository state machine (DESIGN.md §11).
+
+One app instance serves one repository directory through the same
+:class:`ArtifactStore` a local client would open — the hub is "just another
+peer" whose transport happens to be HTTP. The HTTP layer
+(:mod:`repro.hub.routes`) stays a thin codec: every semantic decision lives
+here so it is unit-testable without sockets.
+
+Concurrency model (§11.3): object ingestion and reads are fully parallel —
+the CAS is internally locked, writes are content-addressed and idempotent,
+and reads come off the pooled mmap views. Only the *lineage publish* takes
+the per-repo write lock, and only for the duration of one compare-and-swap:
+the client sends the etag of the document its merge was based on, and a
+mismatch raises :class:`PublishConflict` (HTTP 409) instead of clobbering a
+concurrent pusher's work. Refcount finalization re-derives its root set
+from the *current* published document under the same lock, so interleaved
+``publish``/``finalize`` pairs from racing clients always converge on exact
+counts (fsck-clean).
+
+Quarantine is honored server-side (§9.4 meets §11.3): a pushed document may
+not introduce or modify nodes flagged quarantined — the hub keeps its own
+copy (or drops a new quarantined node) and reports the rejected names,
+unless the operator started it with ``allow_quarantined``. Client-side
+filtering already does this by default; the server check makes the policy
+hold against old or adversarial clients too.
+
+As everywhere in the remote stack, the hub only ever handles *stored*
+artifact bytes: manifests, tensors and delta blobs under their CAS keys.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Any, Dict, Iterable, Iterator, List, Mapping, Optional
+from typing import Sequence, Tuple
+
+from repro.hub.auth import TokenAuth
+from repro.remote.journal import LocalJournalStore
+from repro.remote.transport import (ETAG_ABSENT, PublishConflict,
+                                    lineage_etag)
+from repro.store.artifact_store import ArtifactStore
+
+
+class HubApp:
+    """Serves one repo directory; thread-safe for a ThreadingHTTPServer."""
+
+    def __init__(self, root: str, token: Optional[str] = None,
+                 allow_quarantined: bool = False) -> None:
+        self.root = os.path.abspath(root)
+        os.makedirs(self.root, exist_ok=True)
+        self.store = ArtifactStore(root=self.root)
+        self.journal = LocalJournalStore(self.root)
+        self.auth = TokenAuth(token)
+        self.allow_quarantined = allow_quarantined
+        self._publish_lock = threading.Lock()
+        self._stats_lock = threading.Lock()
+        self.started_at = time.time()
+        self.stats: Dict[str, int] = {
+            "requests": 0, "bytes_in": 0, "bytes_out": 0,
+            "objects_served": 0, "objects_received": 0,
+            "publishes": 0, "conflicts_409": 0, "quarantine_rejected": 0,
+            "auth_failures": 0, "finalizes": 0,
+        }
+
+    # -- stats ---------------------------------------------------------------
+    def count(self, **deltas: int) -> None:
+        with self._stats_lock:
+            for key, d in deltas.items():
+                self.stats[key] = self.stats.get(key, 0) + d
+
+    def stats_json(self) -> Dict[str, Any]:
+        with self._stats_lock:
+            out: Dict[str, Any] = dict(self.stats)
+        out["uptime_seconds"] = round(time.time() - self.started_at, 3)
+        out["objects"] = self.store.cas.object_count()
+        out["physical_bytes"] = self.store.cas.physical_bytes()
+        out["in_flight_transfers"] = list(self.journal.journal_list())
+        return out
+
+    # -- lineage document ----------------------------------------------------
+    def _lineage_path(self) -> str:
+        return os.path.join(self.root, "lineage.json")
+
+    def lineage(self) -> Tuple[Optional[Dict], str]:
+        """Current document + etag (``ETAG_ABSENT`` when none published)."""
+        if not os.path.exists(self._lineage_path()):
+            return None, ETAG_ABSENT
+        with open(self._lineage_path()) as f:
+            payload = json.load(f)
+        return payload, lineage_etag(payload)
+
+    def _filter_quarantined(self, payload: Dict, current: Optional[Dict]
+                            ) -> Tuple[Dict, List[str]]:
+        """Enforce the quarantine policy on an incoming document.
+
+        A quarantined node identical to the hub's copy passes (it is not
+        being *propagated*, just echoed back by the client's merge); one
+        that is new or modified is replaced by the hub's copy or dropped.
+        Adjacency lists are pruned to the surviving node set afterwards so
+        a drop never leaves dangling edges."""
+        from repro.diag.gate import is_quarantined  # late: diag pulls extras
+        cur = {n["name"]: n for n in (current or {}).get("nodes", [])}
+        kept: List[Dict] = []
+        rejected: List[str] = []
+        for node in payload.get("nodes", []):
+            if is_quarantined(node) and node != cur.get(node["name"]):
+                rejected.append(node["name"])
+                if node["name"] in cur:
+                    kept.append(cur[node["name"]])
+                continue
+            kept.append(node)
+        if not rejected:
+            return payload, []
+        names = {n["name"] for n in kept}
+        for node in kept:
+            for field in ("parents", "children", "version_parents",
+                          "version_children"):
+                node[field] = [x for x in node.get(field, []) if x in names]
+        return {"nodes": kept}, sorted(rejected)
+
+    def publish(self, payload: Dict, expected: Optional[str] = None
+                ) -> Dict[str, Any]:
+        """Compare-and-swap the lineage document (the push commit point).
+
+        Raises :class:`PublishConflict` when ``expected`` no longer matches
+        the current etag. Returns ``{"etag", "quarantined_rejected"}``."""
+        with self._publish_lock:
+            current, current_etag = self.lineage()
+            if expected is not None and expected != current_etag:
+                self.count(conflicts_409=1)
+                raise PublishConflict(current_etag)
+            if not self.allow_quarantined:
+                payload, rejected = self._filter_quarantined(payload, current)
+            else:
+                rejected = []
+            tmp = self._lineage_path() + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(payload, f, indent=1)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, self._lineage_path())
+            self.count(publishes=1, quarantine_rejected=len(rejected))
+            return {"etag": lineage_etag(payload),
+                    "quarantined_rejected": rejected}
+
+    def finalize(self) -> int:
+        """Rebuild exact refcounts from the *current* document's roots.
+
+        Root derivation is server-side on purpose: a racing client's view
+        of the merged roots may be stale by the time its finalize arrives;
+        the published document is the single source of truth. Runs under
+        the publish lock so a rebuild never interleaves with a swap."""
+        with self._publish_lock:
+            payload, _ = self.lineage()
+            roots = [n["artifact_ref"] for n in (payload or {}).get("nodes", [])
+                     if n.get("artifact_ref")]
+            counts = self.store.rebuild_refcounts(roots)
+            self.count(finalizes=1)
+            return len(counts)
+
+    # -- objects -------------------------------------------------------------
+    def have(self, keys: Sequence[str]) -> List[str]:
+        cas = self.store.cas
+        return [k for k in keys if cas.has(k)]
+
+    def object_sizes(self, keys: Sequence[str]
+                     ) -> Tuple[Dict[str, int], List[str]]:
+        """(sizes of present keys, missing keys) — the mget preflight that
+        lets routes send an exact Content-Length before streaming."""
+        cas = self.store.cas
+        sizes: Dict[str, int] = {}
+        missing: List[str] = []
+        for k in keys:
+            if cas.has(k):
+                sizes[k] = cas.size(k)
+            else:
+                missing.append(k)
+        return sizes, missing
+
+    def iter_object_views(self, keys: Sequence[str]
+                          ) -> Iterator[Tuple[str, memoryview]]:
+        """Zero-copy streaming multi-get straight off the CAS mmap pool."""
+        return self.store.cas.iter_views(keys)
+
+    def import_objects(self, objects: Mapping[str, bytes]) -> int:
+        written = self.store.import_objects(objects)
+        self.count(objects_received=len(objects))
+        return written
+
+    def fsck(self) -> Dict[str, Any]:
+        payload, _ = self.lineage()
+        roots = [n["artifact_ref"] for n in (payload or {}).get("nodes", [])
+                 if n.get("artifact_ref")]
+        report = self.store.fsck(roots)
+        report["in_flight_transfers"] = list(self.journal.journal_list())
+        return report

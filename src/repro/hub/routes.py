@@ -1,0 +1,355 @@
+"""HTTP surface of the hub daemon (DESIGN.md §11.2).
+
+A thin, dependency-free codec over :class:`~repro.hub.app.HubApp` built on
+stdlib ``http.server.ThreadingHTTPServer`` — one OS thread per in-flight
+request, which is exactly the shape the app's locking was designed for
+(parallel object I/O, serialized lineage swap).
+
+Endpoints (all JSON unless noted; see the §11.2 protocol table):
+
+    GET    /api/ping                 liveness (unauthenticated)
+    GET    /api/lineage              document + ``ETag`` header; 404 if none
+    PUT    /api/lineage              conditional on ``If-Match`` -> 200/409
+    POST   /api/have                 {"keys": [...]} -> {"have": [...]}
+    GET    /api/objects/<key>        raw object; honors ``Range`` (206)
+    POST   /api/objects/mget         {"keys": [...]} -> pack record stream
+    POST   /api/objects              pack record stream -> {"imported", ...}
+    POST   /api/finalize             refcount rebuild from current document
+    GET    /api/journal[/<tid>]      transfer journal list / entry
+    PUT    /api/journal/<tid>        persist a journal entry
+    DELETE /api/journal/<tid>        retire a journal entry
+    GET    /api/stats                live counters
+    GET    /api/fsck                 integrity report of the served repo
+
+Object payloads stream zero-copy: single-object GETs and mget streams write
+``memoryview`` slices of the CAS's pooled mmaps straight to the socket,
+with an exact ``Content-Length`` precomputed from O(1) size lookups — the
+hub never holds a full transfer in memory. JSON bodies accept and JSON
+responses offer gzip content-encoding above a small floor; object bytes are
+LZMA/npy payloads already and are never recompressed.
+"""
+
+from __future__ import annotations
+
+import gzip
+import json
+import re
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Any, Dict, Optional, Tuple
+from urllib.parse import unquote, urlsplit
+
+from repro.hub.app import HubApp
+from repro.remote.http import GZIP_FLOOR, WIRE_REC_HEAD, iter_records
+from repro.remote.transport import ETAG_ABSENT, PublishConflict
+
+_RANGE_RE = re.compile(r"bytes=(\d+)-(\d*)$")
+
+# CAS keys and journal ids are hash-derived tokens; anything else in the
+# path tail is hostile (os.path.join would resolve '../' segments OUTSIDE
+# the served repository — remote file read/write). Dot-only names are
+# excluded too ('.'/'..' are directories even without a separator).
+_SAFE_ID_RE = re.compile(r"^[A-Za-z0-9._-]+$")
+
+
+def _safe_id(s: str) -> bool:
+    return bool(_SAFE_ID_RE.match(s)) and set(s) != {"."}
+
+
+class _RangeNotSatisfiable(Exception):
+    """Range start at/after EOF — HTTP 416, not a malformed request."""
+
+
+class HubRequestHandler(BaseHTTPRequestHandler):
+    server_version = "mgit-hub/1.0"
+    protocol_version = "HTTP/1.1"
+
+    # -- plumbing ------------------------------------------------------------
+    @property
+    def app(self) -> HubApp:
+        return self.server.app  # type: ignore[attr-defined]
+
+    def log_message(self, format: str, *args: Any) -> None:
+        pass  # request metrics live in app.stats, not stderr
+
+    def _gzip_ok(self) -> bool:
+        return "gzip" in (self.headers.get("Accept-Encoding") or "")
+
+    def _read_body(self) -> bytes:
+        length = int(self.headers.get("Content-Length") or 0)
+        data = self.rfile.read(length) if length else b""
+        self.app.count(bytes_in=len(data))
+        if self.headers.get("Content-Encoding") == "gzip":
+            data = gzip.decompress(data)
+        return data
+
+    def _read_json(self) -> Dict:
+        body = self._read_body()
+        return json.loads(body) if body else {}
+
+    def _send_json(self, obj: Any, status: int = 200,
+                   headers: Optional[Dict[str, str]] = None) -> None:
+        body = json.dumps(obj).encode()
+        hdrs = dict(headers or {})
+        if self._gzip_ok() and len(body) > GZIP_FLOOR:
+            body = gzip.compress(body, 5)
+            hdrs["Content-Encoding"] = "gzip"
+        if status >= 400:
+            # error paths may not have drained the request body (401 fires
+            # before _read_body); leftover bytes on a keep-alive socket
+            # would be parsed as the next request line — close instead
+            self.close_connection = True
+        self.send_response(status)
+        self.send_header("Content-Type", "application/json")
+        for k, v in hdrs.items():
+            self.send_header(k, v)
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+        self.app.count(bytes_out=len(body))
+
+    # -- auth ----------------------------------------------------------------
+    def _authorized(self, path: str) -> bool:
+        if path == "/api/ping":
+            return True  # health probes run without credentials
+        if self.app.auth.check(self.headers.get("Authorization")):
+            return True
+        self.app.count(auth_failures=1)
+        self._send_json({"error": "unauthorized"}, status=401,
+                        headers={"WWW-Authenticate": "Bearer"})
+        return False
+
+    # -- dispatch ------------------------------------------------------------
+    def _route(self, method: str) -> None:
+        path = unquote(urlsplit(self.path).path).rstrip("/") or "/"
+        self.app.count(requests=1)
+        if not self._authorized(path):
+            return
+        try:
+            handler = self._resolve(method, path)
+            if handler is None:
+                self._send_json({"error": f"no route {method} {path}"},
+                                status=404)
+                return
+            handler()
+        except PublishConflict as exc:
+            self._send_json({"error": "lineage moved",
+                             "etag": exc.current_etag}, status=409)
+        except (ValueError, KeyError, json.JSONDecodeError) as exc:
+            self._send_json({"error": str(exc)}, status=400)
+        except ConnectionError:
+            raise  # client went away mid-response; nothing to send
+        except Exception as exc:  # noqa: BLE001 — daemon must not die
+            self._send_json({"error": f"internal: {exc}"}, status=500)
+
+    def _resolve(self, method: str, path: str):
+        if path.startswith("/api/objects/") and path != "/api/objects/mget":
+            key = path[len("/api/objects/"):]
+            if not _safe_id(key):
+                return None  # 404s — never reaches a filesystem join
+            if method == "GET":
+                return lambda: self._get_object(key)
+            return None
+        if path.startswith("/api/journal/"):
+            tid = path[len("/api/journal/"):]
+            if not _safe_id(tid):
+                return None
+            return {"GET": lambda: self._journal_get(tid),
+                    "PUT": lambda: self._journal_put(tid),
+                    "DELETE": lambda: self._journal_delete(tid),
+                    }.get(method)
+        table = {
+            ("GET", "/api/ping"): self._ping,
+            ("GET", "/api/lineage"): self._get_lineage,
+            ("PUT", "/api/lineage"): self._put_lineage,
+            ("POST", "/api/have"): self._have,
+            ("POST", "/api/objects/mget"): self._mget,
+            ("POST", "/api/objects"): self._put_objects,
+            ("POST", "/api/finalize"): self._finalize,
+            ("GET", "/api/journal"): self._journal_list,
+            ("GET", "/api/stats"): self._stats,
+            ("GET", "/api/fsck"): self._fsck,
+        }
+        return table.get((method, path))
+
+    def do_GET(self) -> None:
+        self._route("GET")
+
+    def do_POST(self) -> None:
+        self._route("POST")
+
+    def do_PUT(self) -> None:
+        self._route("PUT")
+
+    def do_DELETE(self) -> None:
+        self._route("DELETE")
+
+    # -- routes --------------------------------------------------------------
+    def _ping(self) -> None:
+        self._send_json({"ok": True, "service": "mgit-hub",
+                         "auth": self.app.auth.enabled})
+
+    def _get_lineage(self) -> None:
+        payload, etag = self.app.lineage()
+        if payload is None:
+            self._send_json({"error": "no lineage published"}, status=404,
+                            headers={"ETag": etag})
+            return
+        self._send_json(payload, headers={"ETag": etag})
+
+    def _put_lineage(self) -> None:
+        expected = self.headers.get("If-Match")
+        payload = self._read_json()
+        result = self.app.publish(payload, expected=expected)
+        self._send_json(result, headers={"ETag": result["etag"]})
+
+    def _have(self) -> None:
+        keys = self._read_json().get("keys", [])
+        self._send_json({"have": self.app.have(keys)})
+
+    def _parse_range(self, size: int) -> Optional[Tuple[int, int]]:
+        """``(start, length)`` from a single-range header, or None."""
+        header = self.headers.get("Range")
+        if not header:
+            return None
+        m = _RANGE_RE.match(header.strip())
+        if not m:
+            raise ValueError(f"unsupported Range {header!r}")
+        start = int(m.group(1))
+        end = int(m.group(2)) if m.group(2) else size - 1
+        if start >= size or end < start:
+            # 416, not 400: a resume positioned exactly at EOF is a healthy
+            # "nothing left to fetch", not a malformed request
+            raise _RangeNotSatisfiable(size)
+        return start, min(end, size - 1) - start + 1
+
+    def _get_object(self, key: str) -> None:
+        try:
+            view = self.app.store.cas.get_view(key)
+        except KeyError:
+            self._send_json({"error": f"no object {key!r}"}, status=404)
+            return
+        size = len(view)
+        try:
+            rng = self._parse_range(size)
+        except _RangeNotSatisfiable:
+            self._send_json({"error": "range not satisfiable", "size": size},
+                            status=416,
+                            headers={"Content-Range": f"bytes */{size}"})
+            return
+        if rng is None:
+            start, length, status = 0, size, 200
+        else:
+            (start, length), status = rng, 206
+        self.send_response(status)
+        self.send_header("Content-Type", "application/octet-stream")
+        self.send_header("Accept-Ranges", "bytes")
+        if status == 206:
+            self.send_header("Content-Range",
+                             f"bytes {start}-{start + length - 1}/{size}")
+        self.send_header("Content-Length", str(length))
+        self.end_headers()
+        self.wfile.write(view[start:start + length])  # zero-copy off mmap
+        self.app.count(bytes_out=length, objects_served=1)
+
+    def _mget(self) -> None:
+        keys = self._read_json().get("keys", [])
+        sizes, missing = self.app.object_sizes(keys)
+        if missing:
+            self._send_json({"error": "missing objects",
+                             "missing": missing[:32]}, status=404)
+            return
+        total = sum(WIRE_REC_HEAD.size + len(k.encode()) + n
+                    for k, n in sizes.items())
+        self.send_response(200)
+        self.send_header("Content-Type", "application/x-mgit-pack")
+        self.send_header("Content-Length", str(total))
+        self.end_headers()
+        try:
+            for key, view in self.app.iter_object_views(list(sizes)):
+                if len(view) != sizes[key]:
+                    raise ValueError(f"object {key!r} changed size "
+                                     "mid-stream")
+                kb = key.encode()
+                self.wfile.write(WIRE_REC_HEAD.pack(len(kb), len(view)))
+                self.wfile.write(kb)
+                self.wfile.write(view)  # zero-copy off the pooled mmap
+        except ConnectionError:
+            raise
+        except Exception:
+            # Headers + a Content-Length already went out: a concurrent gc
+            # or ledger overwrite invalidated the preflight. Splicing a JSON
+            # error into the declared body would corrupt the stream — abort
+            # the connection instead; the client sees a short read and
+            # retries through its backoff path.
+            self.close_connection = True
+            return
+        self.app.count(bytes_out=total, objects_served=len(sizes))
+
+    def _put_objects(self) -> None:
+        body = self._read_body()
+        objects = dict(iter_records(body))
+        written = self.app.import_objects(objects)
+        self._send_json({"imported": len(objects), "bytes_written": written})
+
+    def _finalize(self) -> None:
+        self._read_body()  # client-side roots are advisory; drain + ignore
+        self._send_json({"refcounts": self.app.finalize()})
+
+    def _journal_get(self, tid: str) -> None:
+        payload = self.app.journal.journal_load(tid)
+        if payload is None:
+            self._send_json({"error": f"no journal {tid}"}, status=404)
+        else:
+            self._send_json(payload)
+
+    def _journal_put(self, tid: str) -> None:
+        self.app.journal.journal_write(tid, self._read_json())
+        self._send_json({"ok": True})
+
+    def _journal_delete(self, tid: str) -> None:
+        self.app.journal.journal_clear(tid)
+        self._send_json({"ok": True})
+
+    def _journal_list(self) -> None:
+        self._send_json({"transfers": list(self.app.journal.journal_list())})
+
+    def _stats(self) -> None:
+        self._send_json(self.app.stats_json())
+
+    def _fsck(self) -> None:
+        self._send_json(self.app.fsck())
+
+
+class HubServer(ThreadingHTTPServer):
+    """ThreadingHTTPServer bound to one :class:`HubApp`."""
+
+    daemon_threads = True
+    allow_reuse_address = True
+
+    def __init__(self, app: HubApp, host: str = "127.0.0.1",
+                 port: int = 0) -> None:
+        self.app = app
+        super().__init__((host, port), HubRequestHandler)
+
+    @property
+    def url(self) -> str:
+        host, port = self.server_address[:2]
+        return f"http://{host}:{port}"
+
+
+def make_server(app: HubApp, host: str = "127.0.0.1",
+                port: int = 0) -> HubServer:
+    """Bind (port 0 picks an ephemeral one) without starting the loop —
+    tests and the CLI both drive ``serve_forever`` themselves."""
+    return HubServer(app, host=host, port=port)
+
+
+def start_in_thread(app: HubApp, host: str = "127.0.0.1", port: int = 0
+                    ) -> Tuple[HubServer, threading.Thread]:
+    """Serve on a daemon thread; returns the bound server (``server.url``)."""
+    server = make_server(app, host=host, port=port)
+    thread = threading.Thread(target=server.serve_forever,
+                              name="mgit-hub", daemon=True)
+    thread.start()
+    return server, thread

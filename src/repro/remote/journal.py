@@ -19,7 +19,11 @@ of a sync.
 
 :class:`LocalJournalStore` persists journals for the pull direction (where
 the receiver is the local repo); for push the journal methods live on the
-:class:`~repro.remote.transport.Transport`.
+:class:`~repro.remote.transport.Transport` — over HTTP they become the
+hub's ``/api/journal`` endpoints (DESIGN.md §11.4), so an interrupted
+network push resumes against the same closure-keyed journal id exactly
+like a local one. Chunks carry stored CAS objects only (``m_``/tensor/
+blob/``t_`` keys, §3.2) — journal state never references live models.
 """
 
 from __future__ import annotations

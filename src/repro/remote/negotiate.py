@@ -20,6 +20,12 @@ a filtered (shallow) push prefers shipping delta blobs when the receiver
 already has — or is about to receive — the chain base, and falls back to
 flattening the manifest to full tensors when the base lies outside the
 selection (§8.3).
+
+Keys negotiated here are the CAS schemes of DESIGN.md §3.2: ``m_`` manifest
+hashes, bare tensor/blob content hashes, and (when diagnostics ride along)
+``t_`` ledger entries. The derived ``s_`` scoped-content keys never appear
+in a closure — they name no stored object. All object payloads are the
+*stored* (delta-quantized) artifact form; nothing in-memory is negotiated.
 """
 
 from __future__ import annotations

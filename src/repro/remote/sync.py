@@ -12,12 +12,21 @@ the protocol phases:
 3. **transfer** — parallel chunked object movement with a resumable journal
    on the receiving side (:mod:`repro.remote.journal`);
 4. **reconcile** — a three-way merge of lineage metadata against the
-   remote-tracking base state, reusing the §5 conflict classification
+   remote-tracking base state, reusing the paper-§5 conflict classification
    (``conflict`` / ``possible_conflict`` / ``no_conflict``) per node, with
    artifact-level auto-merge of divergent models on pull;
 5. **publish** — the merged lineage document replaces the receiver's
-   atomically (the single commit point), then refcounts are rebuilt from the
-   new lineage roots.
+   atomically via *optimistic swap* (DESIGN.md §11.3): the publish carries
+   the etag of the document the merge was based on, a concurrent pusher
+   makes the swap fail (HTTP 409), and the engine re-fetches/re-merges/
+   retries. After publish, refcounts are rebuilt from the lineage roots.
+
+The engine is transport-agnostic: ``LocalTransport`` (a directory) and
+:class:`repro.remote.http.HttpTransport` (a hub daemon, §11) both satisfy
+the same ABC, so push/pull/clone against ``http://`` remotes are the same
+code path, byte for byte. Bit-identity across peers always means the
+*stored* artifacts (store-loaded params) — in-memory models differ from
+their committed form by the delta-quantization eps.
 
 An interrupted transfer leaves both sides consistent: the receiver gains
 only content-addressed objects (no lineage pointer moves) plus a journal
@@ -39,9 +48,19 @@ from repro.remote.journal import (LocalJournalStore, run_journalled_transfer,
                                   transfer_id)
 from repro.remote.negotiate import (CHUNK_OBJECTS, closure_keys, needs_flatten,
                                     plan_transfer, walk_manifests)
-from repro.remote.transport import LocalTransport, Transport
+from repro.remote.transport import (LocalTransport, PublishConflict,
+                                    Transport)
 
 _SEVERITY = {NO_CONFLICT: 0, POSSIBLE_CONFLICT: 1, CONFLICT: 2}
+
+#: bound on the 409 -> re-fetch -> re-merge -> re-publish loop of a push;
+#: each retry merges against a strictly newer remote document, so livelock
+#: needs a pathological writer hammering the remote faster than we merge
+MAX_PUBLISH_ATTEMPTS = 6
+
+
+def _is_url(s: str) -> bool:
+    return "://" in s
 
 
 # ---------------------------------------------------------------------------
@@ -70,7 +89,9 @@ def _save_remotes(repo: str, remotes: Dict[str, str]) -> None:
 
 def remote_add(repo: str, name: str, url: str) -> None:
     remotes = remote_list(repo)
-    remotes[name] = os.path.abspath(url)
+    # Directory remotes normalize to absolute paths (stable across cwd
+    # changes); http(s) hub urls pass through untouched.
+    remotes[name] = url if _is_url(url) else os.path.abspath(url)
     _save_remotes(repo, remotes)
 
 
@@ -80,14 +101,25 @@ def remote_remove(repo: str, name: str) -> None:
     _save_remotes(repo, remotes)
 
 
+def _transport_for(url: str) -> Transport:
+    """Scheme dispatch: ``http(s)://`` speaks to a hub daemon
+    (:class:`~repro.remote.http.HttpTransport`), anything else is a
+    filesystem peer."""
+    if _is_url(url):
+        from repro.remote.http import HttpTransport  # lazy: client-only dep
+        return HttpTransport(url)
+    return LocalTransport(url)
+
+
 def resolve_transport(repo: str, name_or_url: str
                       ) -> Tuple[Transport, Optional[str]]:
     """A configured remote name resolves through ``remotes.json`` (and gets
-    tracking state); a bare path is used directly (stateless sync)."""
+    tracking state); a bare path or ``http(s)://`` url is used directly
+    (stateless sync)."""
     remotes = remote_list(repo)
     if name_or_url in remotes:
-        return LocalTransport(remotes[name_or_url]), name_or_url
-    return LocalTransport(name_or_url), None
+        return _transport_for(remotes[name_or_url]), name_or_url
+    return _transport_for(name_or_url), None
 
 
 class RemoteState:
@@ -171,7 +203,7 @@ def _merge_scalar(base, ours, theirs) -> Tuple[Any, bool]:
 def _classify_artifact_divergence(store, name: str, base_ref: Optional[str],
                                   ours_ref: str, theirs_ref: str
                                   ) -> Tuple[Optional[str], str, str]:
-    """Both sides re-committed a node's model: classify with the §5 decision
+    """Both sides re-committed a node's model: classify with the paper-§5 decision
     tree (Figure 2) and auto-merge parameters when it allows. Returns
     ``(ref_to_use or None-for-keep-ours, status, detail)``."""
     if store is None or base_ref is None:
@@ -267,7 +299,7 @@ def merge_lineage(base_payload: Optional[Dict], ours_payload: Dict,
     """Three-way merge of two lineage documents against a common base.
 
     Grow-only reconciliation by default: concurrently added nodes and edges
-    union; divergent per-node fields classify through the §5 conflict
+    union; divergent per-node fields classify through the paper-§5 conflict
     classes, keeping the local side on ``conflict``. Adjacency lists are
     pruned to the merged node set, so a filtered (shallow) payload never
     introduces dangling references."""
@@ -310,8 +342,13 @@ class SyncReport:
     objects_transferred: int
     bytes_transferred: int
     chunks_resumed: int = 0
+    publish_retries: int = 0    # optimistic-swap 409s absorbed (DESIGN.md §11.3)
     flattened: Dict[str, str] = dataclasses.field(default_factory=dict)
     quarantined_skipped: List[str] = dataclasses.field(default_factory=list)
+    # nodes the RECEIVER's quarantine policy refused at publish (§11.3) —
+    # distinct from quarantined_skipped, which the sender filtered itself
+    quarantine_rejected_by_remote: List[str] = dataclasses.field(
+        default_factory=list)
     merge: Optional[LineageMergeReport] = None
     published: bool = True
 
@@ -463,7 +500,6 @@ def push(graph: LineageGraph, transport: Transport,
         chunk_size)
 
     theirs_payload = {"nodes": selected}
-    remote_payload = transport.fetch_lineage() or {"nodes": []}
     # Roles from the REMOTE's point of view: its document is "ours", the
     # pushed subgraph is "theirs". No artifact auto-merge on push — the
     # remote side cannot be mutated beyond publish (classification only).
@@ -476,16 +512,40 @@ def push(graph: LineageGraph, transport: Transport,
         skip = set(quarantined_skipped)
         base_payload = {"nodes": [n for n in base_payload["nodes"]
                                   if n["name"] not in skip]}
-    merged, report = merge_lineage(base_payload,
-                                   remote_payload, theirs_payload, store=None)
-    published = force or report.status != CONFLICT
-    if published:
+    # Optimistic lineage swap (DESIGN.md §11.3): publish conditionally on
+    # the etag of the document this merge was computed against. A racing
+    # pusher landing in between makes the swap fail (409 over HTTP) —
+    # re-fetch the now-newer document, re-merge, retry. Object uploads are
+    # NOT repeated: they are content-addressed and already on the remote.
+    publish_retries = 0
+    published = False
+    server_rejected: List[str] = []
+    for _attempt in range(MAX_PUBLISH_ATTEMPTS):
+        remote_payload, remote_etag = transport.fetch_lineage_versioned()
+        remote_payload = remote_payload or {"nodes": []}
+        merged, report = merge_lineage(base_payload, remote_payload,
+                                       theirs_payload, store=None)
+        published = force or report.status != CONFLICT
+        if not published:
+            break
         if force and report.status == CONFLICT:
             merged_nodes = {n["name"]: n for n in merged["nodes"]}
             for node in selected:
                 merged_nodes[node["name"]] = node
             merged = {"nodes": list(merged_nodes.values())}
-        transport.publish_lineage(merged)
+        try:
+            ack = transport.publish_lineage(merged, expected=remote_etag)
+        except PublishConflict:
+            publish_retries += 1
+            published = False
+            continue
+        # Nodes the receiver's quarantine policy refused were NOT published
+        # — they must stay out of the merge base below, or the next pull
+        # would read their absence on the remote as a remote deletion and
+        # silently delete the local copy.
+        server_rejected = sorted((ack or {}).get("quarantined_rejected", []))
+        break
+    if published:
         transport.finalize([n["artifact_ref"] for n in merged["nodes"]
                             if n.get("artifact_ref")])
         # Advance the merge base: drop nodes no longer on the remote, then
@@ -495,13 +555,14 @@ def push(graph: LineageGraph, transport: Transport,
         # every later push keeps treating the remote's copy as remote-only
         # content to preserve rather than a deletion to propagate.
         merged_by_name = {n["name"]: n for n in merged["nodes"]}
-        skip = set(quarantined_skipped)
+        skip = set(quarantined_skipped) | set(server_rejected)
         old = state.load() or {"nodes": []}
         base_nodes = {n["name"]: n for n in old["nodes"]
                       if n["name"] in merged_by_name
                       and n["name"] not in skip}
         for node in selected:
-            if merged_by_name.get(node["name"]) == node:
+            if (node["name"] not in skip
+                    and merged_by_name.get(node["name"]) == node):
                 base_nodes[node["name"]] = node
         state.save({"nodes": list(base_nodes.values())})
 
@@ -509,8 +570,9 @@ def push(graph: LineageGraph, transport: Transport,
                       selected_nodes=[n["name"] for n in selected],
                       objects_total=plan.total, objects_transferred=moved,
                       bytes_transferred=moved_bytes, chunks_resumed=resumed,
-                      flattened=flattened,
+                      publish_retries=publish_retries, flattened=flattened,
                       quarantined_skipped=quarantined_skipped,
+                      quarantine_rejected_by_remote=server_rejected,
                       merge=report, published=published)
 
 
@@ -523,7 +585,7 @@ def pull(graph: LineageGraph, transport: Transport,
     lineage document, but the object transfer still completes their delta
     chains (chain-parent manifests ride along as storage-only objects), so
     every pulled parameter reconstructs. Divergent nodes auto-merge at the
-    artifact level when the §5 decision tree allows; ``conflict`` keeps the
+    artifact level when the paper-§5 decision tree allows; ``conflict`` keeps the
     local version and is reported."""
     store = graph.store
     if store is None:
@@ -588,8 +650,9 @@ def pull(graph: LineageGraph, transport: Transport,
 def clone(url: str, dest: str, filter: Optional[str] = None) -> SyncReport:
     """Materialize a remote repo into the fresh directory ``dest``.
 
-    Sets up ``origin`` tracking state so later ``pull``/``push`` three-way
-    merge against what was cloned."""
+    ``url`` is a peer directory or an ``http(s)://`` hub. Sets up
+    ``origin`` tracking state so later ``pull``/``push`` three-way merge
+    against what was cloned."""
     from repro.store import ArtifactStore  # local import: store pulls in jax
     os.makedirs(dest, exist_ok=True)
     if os.path.exists(os.path.join(dest, "lineage.json")):

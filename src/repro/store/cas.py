@@ -4,6 +4,27 @@ Objects (tensors, delta blobs, manifests) are keyed by SHA-256 — writing the
 same content twice costs nothing, which is exactly how parameters shared
 across lineage-graph models are stored once.
 
+Key schemes (DESIGN.md §3.2, §9.1, §9.3 — ``fsck`` verifies each):
+
+* ``m_<bytes_hash>`` — manifests, hash of the JSON payload;
+* ``<tensor_hash>`` — full tensors, hash over (shape, dtype, raw bytes),
+  NOT over the serialized npy stream (re-deriving needs a decode);
+* ``<bytes_hash>`` — delta blobs and raw objects, hash of the stored bytes;
+* ``t_<bytes_hash(test_hash NUL manifest_key)>`` — diagnostics ledger
+  entries, keyed by the *lookup pair* (embedded in the payload) so results
+  probe in O(1); the only scheme where ``put_bytes(overwrite=True)`` may
+  legally change bytes under a key;
+* ``s_<bytes_hash>`` — scoped content keys (``diag/transfer.py``): the hash
+  of a submodule's parameter *hashes*, used as the ledger's manifest_key
+  for scope-declared tests. Derived, never stored as an object itself.
+
+What is stored is always the *stored form* of an artifact: committing
+delta-quantizes against the parent, so the persisted model differs from the
+in-memory one that was committed by up to the quantization eps. Every
+consumer that needs bit-level truth (sync bit-identity checks, fsck,
+diagnostics memoization) must compare store-loaded artifacts, never the
+live Python objects they came from.
+
 Two placement tiers, mirroring git's loose-object/packfile split:
 
 * **loose**: objects >= ``pack_threshold`` bytes get one file each under
@@ -409,6 +430,18 @@ class CAS:
             self.stats["zero_copy_gets"] += 1
             return memoryview(mm)
         return memoryview(self._read_loose(key))
+
+    def iter_views(self, keys: Iterable[str]):
+        """Streaming multi-get: yield ``(key, view)`` pairs lazily.
+
+        The hub's multi-object pack streaming (DESIGN.md §11.2) sits on
+        this — each view is produced only when the consumer is ready to
+        write it out, so serving an arbitrarily large object batch holds at
+        most one object's view at a time (and usually zero copies: views
+        come off the pooled mmap). Raises ``KeyError`` at the position of
+        the first missing key, same contract as :meth:`get_view`."""
+        for key in keys:
+            yield key, self.get_view(key)
 
     def _read_packed(self, pid: int, off: int, length: int) -> bytes:
         with open(self._pack_path(pid), "rb") as f:

@@ -1,0 +1,38 @@
+"""docs/cli.md is generated from the argparse tree and must not drift."""
+
+import os
+import subprocess
+import sys
+
+from repro.cli import build_parser, dump_docs
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOCS_PATH = os.path.join(REPO_ROOT, "docs", "cli.md")
+
+
+def test_cli_docs_match_argparse_tree():
+    generated = dump_docs(build_parser()) + "\n"
+    with open(DOCS_PATH) as f:
+        committed = f.read()
+    assert committed == generated, (
+        "docs/cli.md has drifted from the argparse tree — regenerate with:"
+        "  PYTHONPATH=src python -m repro.cli --dump-docs > docs/cli.md")
+
+
+def test_dump_docs_flag_prints_reference():
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO_ROOT, "src")
+               + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.cli", "--dump-docs"],
+        capture_output=True, text=True, env=env, check=True)
+    assert out.stdout.startswith("# mgit — CLI reference")
+    # deterministic across invocations (no terminal-width dependence)
+    assert out.stdout == dump_docs(build_parser()) + "\n"
+
+
+def test_docs_reference_every_command():
+    generated = dump_docs(build_parser())
+    for command in ("log", "show", "diff", "test", "param", "checkout",
+                    "stats", "gc", "remote", "push", "pull", "clone",
+                    "fsck", "diag", "hub"):
+        assert f"mgit {command}" in generated, f"{command} missing from docs"

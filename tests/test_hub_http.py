@@ -1,0 +1,440 @@
+"""Hub daemon + HttpTransport: wire parity with LocalTransport, optimistic
+swap (409), journalled resume over HTTP, concurrent multi-client pushes,
+server-side quarantine, auth (DESIGN.md §11)."""
+
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import CONFLICT, NO_CONFLICT, LineageGraph
+from repro.hub import HubApp, start_in_thread
+from repro.remote import (HttpTransport, LocalTransport, PublishConflict,
+                          RemoteState, clone, lineage_etag, pull, push,
+                          remote_add, remote_list, resolve_transport)
+from repro.store import ArtifactStore
+
+from helpers import finetune_like, make_chain_model
+
+
+def _repo(path, **store_kw):
+    path = str(path)
+    return LineageGraph(path=path, store=ArtifactStore(root=path, **store_kw))
+
+
+def _seed_repo(path):
+    g = _repo(path)
+    base = make_chain_model(seed=0, d=32)
+    g.add_node(base, "m@v1")
+    g.add_edge("m@v1", "m@v2")
+    g.add_node(finetune_like(base, seed=1), "m@v2")
+    g.add_version_edge("m@v1", "m@v2")
+    return g
+
+
+def _stored(g, name):
+    return g.store.load_artifact(g.nodes[name].artifact_ref)
+
+
+def _assert_bit_identical(g1, g2, names=None):
+    for name in names or g1.nodes:
+        a, b = _stored(g1, name), _stored(g2, name)
+        assert set(a.params) == set(b.params)
+        for k in a.params:
+            np.testing.assert_array_equal(np.asarray(a.params[k]),
+                                          np.asarray(b.params[k]))
+
+
+def _roots(g):
+    return [n.artifact_ref for n in g.nodes.values() if n.artifact_ref]
+
+
+@pytest.fixture
+def hub(tmp_path):
+    """A live hub daemon on a loopback ephemeral port."""
+    app = HubApp(str(tmp_path / "hubrepo"))
+    server, _ = start_in_thread(app)
+    yield app, server.url
+    server.shutdown()
+    server.server_close()
+
+
+def _transport(url, **kw):
+    kw.setdefault("retries", 1)
+    kw.setdefault("backoff", 0.01)
+    return HttpTransport(url, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Wire parity: HTTP round trips are bit-identical to LocalTransport's
+# ---------------------------------------------------------------------------
+
+
+def test_http_push_clone_matches_local_transport(tmp_path, hub):
+    app, url = hub
+    g = _seed_repo(tmp_path / "src")
+
+    rep = push(g, _transport(url), state=RemoteState(g.path, "origin"))
+    assert rep.published and rep.objects_transferred == rep.objects_total > 0
+
+    # the same push through LocalTransport produces the same remote state:
+    # identical lineage document, identical object keys
+    local_dir = str(tmp_path / "localremote")
+    push(g, LocalTransport(local_dir), state=RemoteState(g.path, "o2"))
+    local_doc = json.load(open(f"{local_dir}/lineage.json"))
+    hub_doc, _ = app.lineage()
+    assert lineage_etag(hub_doc) == lineage_etag(local_doc)
+    assert sorted(app.store.cas.keys()) == \
+        sorted(ArtifactStore(root=local_dir).cas.keys())
+
+    clone(url, str(tmp_path / "dst"))
+    g2 = _repo(tmp_path / "dst")
+    assert sorted(g2.nodes) == sorted(g.nodes)
+    for name in g.nodes:
+        assert g2.nodes[name].artifact_ref == g.nodes[name].artifact_ref
+    _assert_bit_identical(g, g2)
+    assert app.fsck()["ok"]
+    assert g2.store.fsck(_roots(g2))["ok"]
+    assert remote_list(g2.path)["origin"] == url  # url survived remote_add
+
+
+def test_second_http_push_transfers_zero_objects(tmp_path, hub):
+    _, url = hub
+    g = _seed_repo(tmp_path / "src")
+    push(g, _transport(url), state=RemoteState(g.path, "origin"))
+    rep = push(g, _transport(url), state=RemoteState(g.path, "origin"))
+    assert rep.objects_transferred == 0
+    assert rep.bytes_transferred == 0
+    assert rep.dedup_ratio == 1.0
+
+
+def test_http_pull_merges_concurrent_growth(tmp_path, hub):
+    _, url = hub
+    g = _seed_repo(tmp_path / "src")
+    push(g, _transport(url), state=RemoteState(g.path, "origin"))
+    clone(url, str(tmp_path / "dst"))
+    g2 = _repo(tmp_path / "dst")
+
+    g.add_edge("m@v2", "m@v3")
+    g.add_node(finetune_like(_stored(g, "m@v2"), seed=7), "m@v3")
+    push(g, _transport(url), state=RemoteState(g.path, "origin"))
+
+    g2.add_edge("m@v1", "side")
+    g2.add_node(finetune_like(_stored(g2, "m@v1"), seed=8), "side")
+    rep = pull(g2, _transport(url), state=RemoteState(g2.path, "origin"))
+    assert rep.merge.status == NO_CONFLICT
+    assert sorted(g2.nodes) == ["m@v1", "m@v2", "m@v3", "side"]
+    _assert_bit_identical(g, g2, names=["m@v3"])
+
+
+def test_ranged_reads_and_transport_extras(tmp_path, hub):
+    app, url = hub
+    g = _seed_repo(tmp_path / "src")
+    t = _transport(url)
+    push(g, t, state=RemoteState(g.path, "origin"))
+
+    key = max(app.store.cas.keys(), key=app.store.cas.size)
+    whole = bytes(app.store.cas.get_bytes(key))
+    assert t.read_objects([key])[key] == whole
+    # ranged reads slice the same bytes (zero-copy mmap path server-side)
+    assert t.read_object_range(key, 0, 10) == whole[:10]
+    assert t.read_object_range(key, 5, 7) == whole[5:12]
+    assert t.read_object_range(key, len(whole) - 3) == whole[-3:]
+    # resume positioned exactly at EOF is "done", not an error (416 -> b"")
+    assert t.read_object_range(key, len(whole)) == b""
+    with pytest.raises(KeyError):
+        t.read_objects([key, "nope_" + "0" * 32])
+    with pytest.raises(KeyError):
+        t.read_object_range("nope_" + "0" * 32, 0, 4)
+    stats = t.server_stats()
+    assert stats["publishes"] >= 1 and stats["objects_received"] > 0
+
+
+def test_path_traversal_rejected(tmp_path, hub):
+    """Object keys / journal ids with path separators or dot-segments must
+    404 before any filesystem join — never escape the served repo."""
+    import http.client
+    from urllib.parse import urlsplit
+    app, url = hub
+    secret = tmp_path / "secret.txt"
+    secret.write_text("not yours")
+    host = urlsplit(url)
+    for quoted in ("..%2F..%2Fsecret.txt", "..%2f..%2f..%2fetc%2fpasswd",
+                   "..", "."):
+        for method, path in (("GET", f"/api/objects/{quoted}"),
+                             ("GET", f"/api/journal/{quoted}"),
+                             ("PUT", f"/api/journal/{quoted}"),
+                             ("DELETE", f"/api/journal/{quoted}")):
+            conn = http.client.HTTPConnection(host.hostname, host.port)
+            conn.request(method, path, body=b"{}" if method == "PUT" else None)
+            resp = conn.getresponse()
+            body = resp.read()
+            conn.close()
+            assert resp.status == 404, (method, path, resp.status, body)
+    assert secret.read_text() == "not yours"
+
+
+# ---------------------------------------------------------------------------
+# Optimistic lineage swap: 409 absorbed by the push retry loop
+# ---------------------------------------------------------------------------
+
+
+class RacingTransport(HttpTransport):
+    """Injects a competing publish between our fetch and our publish —
+    the tightest interleaving the optimistic swap must survive."""
+
+    def __init__(self, url, app, racer_payload, **kw):
+        super().__init__(url, **kw)
+        self._app = app
+        self._racer_payload = racer_payload
+        self._raced = False
+
+    def publish_lineage(self, payload, expected=None):
+        if not self._raced:
+            self._raced = True
+            self._app.publish(self._racer_payload)  # the racer lands first
+        return super().publish_lineage(payload, expected=expected)
+
+
+def test_publish_conflict_409_retries_and_merges(tmp_path, hub):
+    app, url = hub
+    g = _seed_repo(tmp_path / "src")
+    racer = {"nodes": [{"name": "racer@v1", "parents": [], "children": [],
+                        "version_parents": [], "version_children": [],
+                        "model_type": "toy", "creation_fn": None,
+                        "artifact_ref": None, "metadata": {}}]}
+    t = RacingTransport(url, app, racer, retries=1, backoff=0.01)
+    rep = push(g, t, state=RemoteState(g.path, "origin"))
+    assert rep.published
+    assert rep.publish_retries == 1          # exactly one 409 absorbed
+    doc, _ = app.lineage()
+    names = {n["name"] for n in doc["nodes"]}
+    assert names == {"m@v1", "m@v2", "racer@v1"}  # nobody clobbered
+    assert app.stats["conflicts_409"] == 1
+    assert app.fsck()["ok"]
+
+
+def test_stale_etag_publish_raises_409(tmp_path, hub):
+    app, url = hub
+    t = _transport(url)
+    t.publish_lineage({"nodes": []}, expected=None)
+    _, etag = t.fetch_lineage_versioned()
+    t.publish_lineage({"nodes": []}, expected=etag)  # same etag: fine
+    with pytest.raises(PublishConflict):
+        t.publish_lineage({"nodes": []}, expected="bogus-etag")
+
+
+def test_concurrent_pushes_from_two_clients_both_land(tmp_path, hub):
+    app, url = hub
+    ga = _repo(tmp_path / "a")
+    ga.add_node(make_chain_model(seed=0, d=32, prefix="A"), "a@v1")
+    gb = _repo(tmp_path / "b")
+    gb.add_node(make_chain_model(seed=5, d=32, prefix="B"), "b@v1")
+
+    reports, errors = {}, []
+
+    def worker(name, g):
+        try:
+            reports[name] = push(g, _transport(url, retries=2),
+                                 state=RemoteState(g.path, "origin"))
+        except BaseException as exc:  # pragma: no cover - diagnostic aid
+            errors.append((name, exc))
+
+    threads = [threading.Thread(target=worker, args=("a", ga)),
+               threading.Thread(target=worker, args=("b", gb))]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert not errors
+    assert reports["a"].published and reports["b"].published
+
+    doc, _ = app.lineage()
+    assert {n["name"] for n in doc["nodes"]} == {"a@v1", "b@v1"}
+    # refcounts converged exactly despite racing publish/finalize pairs
+    report = app.fsck()
+    assert report["ok"] and not report["refcount_drift"]
+
+    # both clients can pull the union and materialize each other's model
+    pull(ga, _transport(url), state=RemoteState(ga.path, "origin"))
+    pull(gb, _transport(url), state=RemoteState(gb.path, "origin"))
+    _assert_bit_identical(ga, gb)
+
+
+def test_same_node_divergence_converges_via_pull_merge_retry(tmp_path, hub):
+    """The acceptance path: conflicting push -> pull (auto-merge) -> push."""
+    app, url = hub
+    g = _seed_repo(tmp_path / "src")
+    push(g, _transport(url), state=RemoteState(g.path, "origin"))
+    clone(url, str(tmp_path / "dst"))
+    g2 = _repo(tmp_path / "dst")
+
+    # both sides re-commit m@v2 divergently — on DISJOINT layers, so the
+    # paper-§5 decision tree can auto-merge instead of conflicting
+    a = _stored(g, "m@v2")
+    g.add_node(a.replace_params(
+        {"L0/w": np.asarray(a.params["L0/w"]) + 1.0}), "m@v2")
+    push(g, _transport(url), state=RemoteState(g.path, "origin"), force=True)
+    b = _stored(g2, "m@v2")
+    g2.add_node(b.replace_params(
+        {"L1/w": np.asarray(b.params["L1/w"]) + 2.0}), "m@v2")
+
+    rep = push(g2, _transport(url), state=RemoteState(g2.path, "origin"))
+    assert not rep.published and rep.merge.status == CONFLICT
+
+    rep = pull(g2, _transport(url), state=RemoteState(g2.path, "origin"))
+    assert rep.merge.status != CONFLICT     # paper-§5 auto-merge applied
+
+    rep = push(g2, _transport(url), state=RemoteState(g2.path, "origin"))
+    assert rep.published
+    doc, _ = app.lineage()
+    ref = next(n["artifact_ref"] for n in doc["nodes"]
+               if n["name"] == "m@v2")
+    assert ref == g2.nodes["m@v2"].artifact_ref  # merged version landed
+    assert app.fsck()["ok"]
+
+
+# ---------------------------------------------------------------------------
+# Interrupted HTTP push: journalled resume over the network
+# ---------------------------------------------------------------------------
+
+
+class FlakyHttpTransport(HttpTransport):
+    """Connection drops after N successful object uploads."""
+
+    def __init__(self, url, fail_after=1, **kw):
+        super().__init__(url, **kw)
+        self.fail_after = fail_after
+        self._writes = 0
+        self._guard = threading.Lock()
+
+    def write_objects(self, objects):
+        with self._guard:
+            self._writes += 1
+            n = self._writes
+        if n > self.fail_after:
+            raise ConnectionError("simulated mid-push network drop")
+        super().write_objects(objects)
+
+
+def test_interrupted_http_push_resumes_via_server_journal(tmp_path, hub):
+    app, url = hub
+    g = _repo(tmp_path / "src")
+    g.add_node(make_chain_model(seed=0, d=48, n_layers=6), "m@v1")
+
+    flaky = FlakyHttpTransport(url, fail_after=2, retries=0, backoff=0.0)
+    with pytest.raises(ConnectionError):
+        push(g, flaky, chunk_size=3, state=RemoteState(g.path, "origin"))
+    # the hub never published a lineage document...
+    payload, _ = app.lineage()
+    assert payload is None
+    # ...but holds the landed objects plus exactly one in-flight journal
+    t = _transport(url)
+    tids = list(t.journal_list())
+    assert len(tids) == 1
+    done_before = set(t.journal_load(tids[0])["done"])
+    assert done_before
+
+    rep = push(g, t, chunk_size=3, state=RemoteState(g.path, "origin"))
+    assert rep.published
+    assert rep.chunks_resumed == len(done_before)  # journal honored
+    assert rep.objects_transferred < rep.objects_total  # have() dedup
+    assert list(t.journal_list()) == []            # journal retired
+    assert app.fsck()["ok"]
+    g2 = _repo(tmp_path / "dst")
+    pull(g2, _transport(url))
+    _assert_bit_identical(g, g2)
+
+
+# ---------------------------------------------------------------------------
+# Server-side policy: quarantine filtering + auth stub
+# ---------------------------------------------------------------------------
+
+
+def _quarantine(g, name):
+    from repro.diag.gate import QUARANTINE_FLAG
+    g.nodes[name].metadata[QUARANTINE_FLAG] = True
+    g._commit()
+
+
+def test_hub_rejects_pushed_quarantined_nodes(tmp_path, hub):
+    app, url = hub
+    g = _seed_repo(tmp_path / "src")
+    _quarantine(g, "m@v2")
+    rep = push(g, _transport(url), state=RemoteState(g.path, "origin"),
+               include_quarantined=True)  # client opts in; server refuses
+    assert rep.published
+    assert rep.quarantine_rejected_by_remote == ["m@v2"]
+    doc, _ = app.lineage()
+    assert {n["name"] for n in doc["nodes"]} == {"m@v1"}
+    assert app.stats["quarantine_rejected"] == 1
+    # no dangling adjacency survived the drop
+    v1 = next(n for n in doc["nodes"] if n["name"] == "m@v1")
+    assert v1["children"] == [] and v1["version_children"] == []
+    assert app.fsck()["ok"]
+    # a rejected node must NOT have entered the merge base: the next pull
+    # would otherwise read its absence on the hub as a remote deletion and
+    # silently delete the local copy
+    pull(g, _transport(url), state=RemoteState(g.path, "origin"))
+    assert "m@v2" in g.nodes
+
+
+def test_hub_allow_quarantined_opt_in(tmp_path):
+    app = HubApp(str(tmp_path / "hubrepo"), allow_quarantined=True)
+    server, _ = start_in_thread(app)
+    try:
+        g = _seed_repo(tmp_path / "src")
+        _quarantine(g, "m@v2")
+        push(g, _transport(server.url), state=RemoteState(g.path, "origin"),
+             include_quarantined=True)
+        doc, _ = app.lineage()
+        assert {n["name"] for n in doc["nodes"]} == {"m@v1", "m@v2"}
+    finally:
+        server.shutdown()
+        server.server_close()
+
+
+def test_auth_token_enforced(tmp_path):
+    app = HubApp(str(tmp_path / "hubrepo"), token="sekrit")
+    server, _ = start_in_thread(app)
+    try:
+        bad = HttpTransport(server.url, token=None, retries=0)
+        bad.ensure_repo()  # ping stays open for health checks
+        with pytest.raises(PermissionError):
+            bad.have(["k"])
+        with pytest.raises(PermissionError):
+            HttpTransport(server.url, token="wrong", retries=0).have(["k"])
+        good = HttpTransport(server.url, token="sekrit", retries=0)
+        assert good.have(["k"]) == set()
+        assert app.stats["auth_failures"] == 2
+    finally:
+        server.shutdown()
+        server.server_close()
+
+
+# ---------------------------------------------------------------------------
+# Plumbing: scheme dispatch, etag parity, local optimistic swap
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_transport_scheme_dispatch(tmp_path):
+    repo = str(tmp_path / "repo")
+    remote_add(repo, "hubby", "http://127.0.0.1:1/x")
+    t, name = resolve_transport(repo, "hubby")
+    assert isinstance(t, HttpTransport) and name == "hubby"
+    assert remote_list(repo)["hubby"] == "http://127.0.0.1:1/x"
+    t, name = resolve_transport(repo, str(tmp_path / "peer"))
+    assert isinstance(t, LocalTransport) and name is None
+
+
+def test_local_transport_optimistic_swap(tmp_path):
+    t = LocalTransport(str(tmp_path / "remote"))
+    t.ensure_repo()
+    t.publish_lineage({"nodes": []}, expected=None)
+    payload, etag = t.fetch_lineage_versioned()
+    assert payload == {"nodes": []} and etag == lineage_etag(payload)
+    with pytest.raises(PublishConflict):
+        t.publish_lineage({"nodes": []}, expected="stale")
+    t.publish_lineage({"nodes": [{"name": "x"}]}, expected=etag)
+    assert t.fetch_lineage() == {"nodes": [{"name": "x"}]}
