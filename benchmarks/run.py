@@ -1,9 +1,10 @@
 """Benchmark harness entry: one function per paper table/figure.
 
 Prints a ``name,us_per_call,derived`` CSV summary line per benchmark plus
-each benchmark's own table, and writes ``BENCH_PR4.json`` — the machine-
-readable perf trajectory (commit throughput, warm/cold checkout latency,
-dedup ratio) that CI and future PRs diff against.
+each benchmark's own table, and writes the machine-readable perf
+trajectory CI and future PRs diff against: ``BENCH_PR4.json`` (commit
+throughput, warm/cold checkout latency, dedup ratio) and
+``BENCH_PR6.json`` (chunk-level dedup, streaming RSS, ranged pull).
 Usage: PYTHONPATH=src python -m benchmarks.run
 """
 
@@ -123,6 +124,48 @@ def main() -> None:
     _csv("hub_http_push", http_push["seconds"] * 1e6,
          f"http_over_local={http_push['seconds']/max(local_push['seconds'], 1e-9):.2f}x,"
          f"bytes={http_push['bytes_transferred']}")
+
+    print("=" * 72)
+    print("§12 chunk layer — dedup ratio, streaming RSS, parallel ranged pull")
+    print("=" * 72)
+    from benchmarks import bench_chunks
+    dedup, rss, pull = bench_chunks.main()
+    _csv("chunk_dedup", dedup["edit_commit_s"] * 1e6,
+         f"added_frac={dedup['added_frac']:.2%},"
+         f"chunks={dedup['chunks']}")
+    _csv("chunk_rss", rss["commit_s"] * 1e6,
+         f"chunked_mb={rss['chunked_rss_delta_mb']},"
+         f"dense_mb={rss['dense_rss_delta_mb']},"
+         f"budget_mb={rss['rss_budget_mb']}")
+    _csv("chunk_pull", pull["parallel_s"] * 1e6,
+         f"speedup={pull['speedup']:.2f}x,"
+         f"parallel_mb_per_s={pull['parallel_mb_per_s']}")
+    with open("BENCH_PR6.json", "w") as f:
+        json.dump({
+            "edit_dedup": {
+                "tensor_mb": dedup["tensor_mb"],
+                "added_bytes": dedup["added_bytes"],
+                "added_frac": dedup["added_frac"],
+                "chunks": dedup["chunks"],
+            },
+            "streaming_rss": {
+                "tensor_mb": rss["tensor_mb"],
+                "window_mb": rss["window_mb"],
+                "budget_mb": rss["rss_budget_mb"],
+                "chunked_delta_mb": rss["chunked_rss_delta_mb"],
+                "dense_delta_mb": rss["dense_rss_delta_mb"],
+                "commit_mb_per_s": rss["commit_mb_per_s"],
+            },
+            "ranged_pull": {
+                "payload_mb": pull["payload_mb"],
+                "rtt_ms": pull["rtt_ms"],
+                "link_mb_per_s": pull["link_mb_per_s"],
+                "single_s": pull["single_s"],
+                "parallel_s": pull["parallel_s"],
+                "speedup": pull["speedup"],
+            },
+        }, f, indent=1)
+    print("wrote BENCH_PR6.json")
 
     print("=" * 72)
     print("Storage kernels — CPU wall-time + TPU roofline bound")

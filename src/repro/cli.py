@@ -88,10 +88,12 @@ from repro.core import LineageGraph, bfs, module_diff
 from repro.store import ArtifactStore
 
 
-def _graph(repo: str, lzma_preset=None) -> LineageGraph:
+def _graph(repo: str, lzma_preset=None,
+           chunk_threshold=None) -> LineageGraph:
     return LineageGraph(path=repo,
                         store=ArtifactStore(root=repo,
-                                            lzma_preset=lzma_preset))
+                                            lzma_preset=lzma_preset,
+                                            chunk_threshold=chunk_threshold))
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -101,6 +103,11 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--lzma-preset", dest="lzma_preset", type=int,
                     default=None, metavar="N",
                     help="LZMA preset for new delta blobs (0..9; default 0)")
+    ap.add_argument("--chunk-threshold", dest="chunk_threshold", type=int,
+                    default=None, metavar="BYTES",
+                    help="tensors at/above this size commit as content-"
+                         "defined chunk objects (default 8 MiB; 0 disables "
+                         "chunking)")
     ap.add_argument("--dump-docs", action="store_true",
                     help="print the generated CLI reference (docs/cli.md) "
                          "and exit")
@@ -230,7 +237,8 @@ def main(argv=None) -> int:
         print(json.dumps(report.to_json(), indent=1))
         return 0 if report.merge is None or not report.merge.conflicts else 1
 
-    g = _graph(args.repo, lzma_preset=args.lzma_preset)
+    g = _graph(args.repo, lzma_preset=args.lzma_preset,
+               chunk_threshold=args.chunk_threshold)
 
     if args.cmd == "log":
         print(g.log() or "(empty lineage graph)")

@@ -23,5 +23,27 @@ def tensor_hash(x) -> str:
     return h.hexdigest()
 
 
+class TensorHasher:
+    """Incremental :func:`tensor_hash` over a tensor's raw bytes.
+
+    Feeding the contiguous byte stream chunk-by-chunk yields the SAME digest
+    as ``tensor_hash`` over the materialized array — the hash runs over
+    ``str(shape) + str(dtype) + raw bytes``, none of which needs the whole
+    tensor in memory. This is what lets the chunked commit/checkout engine
+    derive and verify content identity of multi-GB tensors under a bounded
+    window (DESIGN.md §12)."""
+
+    def __init__(self, shape, dtype) -> None:
+        self._h = hashlib.sha256()
+        self._h.update(str(tuple(int(d) for d in shape)).encode())
+        self._h.update(str(np.dtype(dtype)).encode())
+
+    def update(self, data) -> None:
+        self._h.update(data)
+
+    def hexdigest(self) -> str:
+        return self._h.hexdigest()
+
+
 def bytes_hash(data: bytes) -> str:
     return hashlib.sha256(data).hexdigest()

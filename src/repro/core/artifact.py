@@ -183,7 +183,15 @@ class ModelArtifact:
     def nbytes(self) -> int:
         if isinstance(self.params, LazyParams):
             return self.params.nbytes_total()
-        return int(sum(np.asarray(v).nbytes for v in self.params.values()))
+        total = 0
+        for v in self.params.values():
+            # trust an integer ``nbytes`` attribute (ndarrays and chunk
+            # sources both carry one) — np.asarray on a streaming chunk
+            # source would try to materialize a multi-GB tensor
+            n = getattr(v, "nbytes", None)
+            total += (int(n) if isinstance(n, (int, np.integer))
+                      else int(np.asarray(v).nbytes))
+        return total
 
     def _clone_graph(self) -> LayerGraph:
         """Structure-preserving copy. Artifacts must not share LayerGraph objects:

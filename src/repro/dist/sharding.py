@@ -102,3 +102,34 @@ def param_spec(path: str, ndim: int) -> P:
     if ("moe" in path or "expert" in path) and ndim >= 3:
         return P(*([None] * (ndim - 3)), "model", "data", None)
     return P(*([None] * (ndim - 2)), "data", "model")
+
+
+def shard_cuts(path: str, shape, itemsize: int,
+               n_shards: int) -> Optional[list]:
+    """Byte offsets where ``n_shards`` axis-0 shards of this param begin/end.
+
+    The chunk layer (``store/chunks.py``, DESIGN.md §12) uses these as hard
+    segment boundaries so no chunk straddles two shards — each host of a
+    distributed consumer can then pull exactly the chunk set covering its
+    own shard. Only axis-0 sharding produces *contiguous* byte ranges in a
+    C-order tensor, so cuts exist only when :func:`param_spec` shards
+    dimension 0 (2-D matmul weights shard dim 0 over ``data``, embeddings
+    over ``model``); replicated or inner-dim-only placements return None.
+    """
+    shape = tuple(int(d) for d in shape)
+    if n_shards <= 1 or len(shape) < 2:
+        return None
+    spec = param_spec(path, len(shape))
+    if not tuple(spec) or tuple(spec)[0] is None:
+        return None
+    rows = shape[0]
+    if rows < n_shards:
+        return None
+    row_bytes = itemsize
+    for d in shape[1:]:
+        row_bytes *= d
+    # same split arithmetic as jax's even-ceil sharding over axis 0
+    cuts = []
+    for s in range(1, n_shards):
+        cuts.append((s * rows) // n_shards * row_bytes)
+    return cuts

@@ -13,6 +13,7 @@ Endpoints (all JSON unless noted; see the §11.2 protocol table):
     POST   /api/have                 {"keys": [...]} -> {"have": [...]}
     GET    /api/objects/<key>        raw object; honors ``Range`` (206)
     POST   /api/objects/mget         {"keys": [...]} -> pack record stream
+    POST   /api/objects/sizes        {"keys": [...]} -> {"sizes", "missing"}
     POST   /api/objects              pack record stream -> {"imported", ...}
     POST   /api/finalize             refcount rebuild from current document
     GET    /api/journal[/<tid>]      transfer journal list / entry
@@ -35,6 +36,7 @@ import gzip
 import json
 import re
 import threading
+import time
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Any, Dict, Optional, Tuple
 from urllib.parse import unquote, urlsplit
@@ -120,9 +122,32 @@ class HubRequestHandler(BaseHTTPRequestHandler):
         return False
 
     # -- dispatch ------------------------------------------------------------
+    def _write_body(self, view) -> None:
+        """Body write with an optional per-connection bandwidth cap.
+
+        ``HubServer.throttle_bps`` (benchmarks/tests only) emulates the
+        per-TCP-stream throughput limit of a real network path — the
+        property that makes parallel ranged connections aggregate
+        bandwidth. Zero (the default) writes straight through.
+        """
+        bps = self.server.throttle_bps  # type: ignore[attr-defined]
+        if not bps:
+            self.wfile.write(view)
+            return
+        step = 256 * 1024
+        mv = memoryview(view)
+        for i in range(0, len(mv), step):
+            piece = mv[i:i + step]
+            self.wfile.write(piece)
+            time.sleep(len(piece) / bps)
+
     def _route(self, method: str) -> None:
         path = unquote(urlsplit(self.path).path).rstrip("/") or "/"
         self.app.count(requests=1)
+        if self.server.delay_s:  # type: ignore[attr-defined]
+            # simulated per-request RTT (benchmarks/tests only): loopback
+            # has none, so this is how WAN behavior is exercised locally
+            time.sleep(self.server.delay_s)  # type: ignore[attr-defined]
         if not self._authorized(path):
             return
         try:
@@ -143,7 +168,8 @@ class HubRequestHandler(BaseHTTPRequestHandler):
             self._send_json({"error": f"internal: {exc}"}, status=500)
 
     def _resolve(self, method: str, path: str):
-        if path.startswith("/api/objects/") and path != "/api/objects/mget":
+        if (path.startswith("/api/objects/")
+                and path not in ("/api/objects/mget", "/api/objects/sizes")):
             key = path[len("/api/objects/"):]
             if not _safe_id(key):
                 return None  # 404s — never reaches a filesystem join
@@ -164,6 +190,7 @@ class HubRequestHandler(BaseHTTPRequestHandler):
             ("PUT", "/api/lineage"): self._put_lineage,
             ("POST", "/api/have"): self._have,
             ("POST", "/api/objects/mget"): self._mget,
+            ("POST", "/api/objects/sizes"): self._sizes,
             ("POST", "/api/objects"): self._put_objects,
             ("POST", "/api/finalize"): self._finalize,
             ("GET", "/api/journal"): self._journal_list,
@@ -249,7 +276,7 @@ class HubRequestHandler(BaseHTTPRequestHandler):
                              f"bytes {start}-{start + length - 1}/{size}")
         self.send_header("Content-Length", str(length))
         self.end_headers()
-        self.wfile.write(view[start:start + length])  # zero-copy off mmap
+        self._write_body(view[start:start + length])  # zero-copy off mmap
         self.app.count(bytes_out=length, objects_served=1)
 
     def _mget(self) -> None:
@@ -273,7 +300,7 @@ class HubRequestHandler(BaseHTTPRequestHandler):
                 kb = key.encode()
                 self.wfile.write(WIRE_REC_HEAD.pack(len(kb), len(view)))
                 self.wfile.write(kb)
-                self.wfile.write(view)  # zero-copy off the pooled mmap
+                self._write_body(view)  # zero-copy off the pooled mmap
         except ConnectionError:
             raise
         except Exception:
@@ -285,6 +312,15 @@ class HubRequestHandler(BaseHTTPRequestHandler):
             self.close_connection = True
             return
         self.app.count(bytes_out=total, objects_served=len(sizes))
+
+    def _sizes(self) -> None:
+        # Size preflight for the pull planner: objects above the ranged-read
+        # floor (chunked tensors' ``c_`` payloads) get segmented parallel
+        # GETs instead of riding the single mget stream. Missing keys are
+        # reported, not an error — the planner mgets whatever remains.
+        keys = self._read_json().get("keys", [])
+        sizes, missing = self.app.object_sizes(keys)
+        self._send_json({"sizes": sizes, "missing": missing})
 
     def _put_objects(self) -> None:
         body = self._read_body()
@@ -326,6 +362,8 @@ class HubServer(ThreadingHTTPServer):
 
     daemon_threads = True
     allow_reuse_address = True
+    delay_s = 0.0        # per-request simulated RTT; see _route
+    throttle_bps = 0     # per-connection bandwidth cap; see _write_body
 
     def __init__(self, app: HubApp, host: str = "127.0.0.1",
                  port: int = 0) -> None:

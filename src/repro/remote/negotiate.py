@@ -22,24 +22,35 @@ flattening the manifest to full tensors when the base lies outside the
 selection (§8.3).
 
 Keys negotiated here are the CAS schemes of DESIGN.md §3.2: ``m_`` manifest
-hashes, bare tensor/blob content hashes, and (when diagnostics ride along)
-``t_`` ledger entries. The derived ``s_`` scoped-content keys never appear
-in a closure — they name no stored object. All object payloads are the
-*stored* (delta-quantized) artifact form; nothing in-memory is negotiated.
+hashes, bare tensor/blob content hashes, ``c_`` chunk objects, and (when
+diagnostics ride along) ``t_`` ledger entries. The derived ``s_`` scoped-
+content keys never appear in a closure — they name no stored object. All
+object payloads are the *stored* (delta-quantized) artifact form; nothing
+in-memory is negotiated.
+
+Chunked entries (DESIGN.md §12) make have/want *chunk-granular* with no
+new protocol: ``parse_manifest`` lists each raw-chunk ``c_`` key and
+per-chunk delta blob as a closure object, so a receiver that already holds
+most of a multi-GB tensor — from an earlier version sharing its grid —
+advertises those chunks in ``have`` and only the edited ones cross the
+wire. :func:`partition_by_size` is the planner's other half: splitting a
+want-set at a byte floor lets the transfer engine route the few huge
+objects through segmented parallel range reads while everything else rides
+the batched mget stream.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, List, Sequence, Set
+from typing import Dict, Iterable, List, Mapping, Sequence, Set, Tuple
 
 from repro.store.manifest_walk import (Fetch, ManifestInfo, closure_keys,
                                        parse_manifest, walk_manifests)
 
 __all__ = [
     "Fetch", "ManifestInfo", "parse_manifest", "walk_manifests",
-    "closure_keys", "chunked", "chain_refs", "needs_flatten",
-    "TransferPlan", "plan_transfer", "CHUNK_OBJECTS",
+    "closure_keys", "chunked", "partition_by_size", "chain_refs",
+    "needs_flatten", "TransferPlan", "plan_transfer", "CHUNK_OBJECTS",
 ]
 
 #: objects fetched per negotiation/transfer batch
@@ -50,6 +61,19 @@ def chunked(seq: Sequence[str], n: int = CHUNK_OBJECTS) -> Iterable[List[str]]:
     seq = list(seq)
     for i in range(0, len(seq), n):
         yield seq[i:i + n]
+
+
+def partition_by_size(keys: Sequence[str], sizes: Mapping[str, int],
+                      floor: int) -> Tuple[List[str], List[str]]:
+    """Split ``keys`` into ``(small, large)`` at ``floor`` stored bytes.
+
+    Keys with unknown size (absent from ``sizes`` — e.g. the peer predates
+    the sizes endpoint) count as small: the mget stream is always correct,
+    ranged parallelism is only an optimization. Both halves preserve the
+    deterministic plan order."""
+    small = [k for k in keys if sizes.get(k, 0) < floor]
+    large = [k for k in keys if sizes.get(k, 0) >= floor]
+    return small, large
 
 
 def chain_refs(closure: Dict[str, ManifestInfo], ref: str) -> List[str]:

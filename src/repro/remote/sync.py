@@ -41,13 +41,16 @@ import json
 import os
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core.lineage import LineageGraph
 from repro.core.merge import (CONFLICT, NO_CONFLICT, POSSIBLE_CONFLICT,
                               merge_artifacts)
 from repro.remote.journal import (LocalJournalStore, run_journalled_transfer,
                                   transfer_id)
 from repro.remote.negotiate import (CHUNK_OBJECTS, closure_keys, needs_flatten,
-                                    plan_transfer, walk_manifests)
+                                    partition_by_size, plan_transfer,
+                                    walk_manifests)
 from repro.remote.transport import (LocalTransport, PublishConflict,
                                     Transport)
 
@@ -57,6 +60,38 @@ _SEVERITY = {NO_CONFLICT: 0, POSSIBLE_CONFLICT: 1, CONFLICT: 2}
 #: each retry merges against a strictly newer remote document, so livelock
 #: needs a pathological writer hammering the remote faster than we merge
 MAX_PUBLISH_ATTEMPTS = 6
+
+#: stored objects at/above this size are fetched as segmented parallel
+#: ranged GETs instead of riding the single mget stream; below it the
+#: per-request overhead of extra connections outweighs the overlap
+RANGE_FLOOR = 4 * 2 ** 20
+RANGE_PART = 1 * 2 ** 20
+RANGE_WORKERS = 4
+
+
+def fetch_objects(transport: Transport,
+                  keys: Sequence[str]) -> Dict[str, bytes]:
+    """Size-aware batch fetch: big objects ride parallel ranged reads.
+
+    Asks the transport for stored sizes first (an optional capability —
+    :class:`LocalTransport` answers from the CAS, the hub via
+    ``POST /api/objects/sizes``, older peers return nothing) and routes
+    every object at/above :data:`RANGE_FLOOR` — in practice chunked
+    tensors' ``c_`` payloads — through ``read_object_parallel``; the rest
+    move as one mget stream exactly as before. Content addressing verifies
+    each reassembled payload when it is imported, so a torn ranged read can
+    never land silently."""
+    keys = list(keys)
+    ranged = getattr(transport, "read_object_parallel", None)
+    if ranged is None or not keys:
+        return transport.read_objects(keys)
+    sizes = transport.object_sizes(keys) or {}
+    small, large = partition_by_size(keys, sizes, RANGE_FLOOR)
+    out = {k: ranged(k, sizes[k], part_bytes=RANGE_PART,
+                     workers=RANGE_WORKERS) for k in large}
+    if small:
+        out.update(transport.read_objects(small))
+    return out
 
 
 def _is_url(s: str) -> bool:
@@ -604,7 +639,7 @@ def pull(graph: LineageGraph, transport: Transport,
     plan = plan_transfer(closure, local_have)
 
     def move_chunk(keys: List[str]) -> int:
-        objs = transport.read_objects(keys)
+        objs = fetch_objects(transport, keys)
         store.import_objects(objs)
         return sum(len(v) for v in objs.values())
 
@@ -662,3 +697,57 @@ def clone(url: str, dest: str, filter: Optional[str] = None) -> SyncReport:
     transport, _ = resolve_transport(dest, "origin")
     return pull(graph, transport, filter=filter,
                 state=RemoteState(dest, "origin"))
+
+
+def fetch_param_shard(store, transport: Transport, ref: str, key: str,
+                      shard: int, n_shards: int) -> bytes:
+    """Pull and materialize one host's axis-0 shard of a stored parameter.
+
+    The shard-granular half of DESIGN.md §12: because commit-time chunk
+    grids never straddle the mesh shard boundaries (``shard_cuts`` segments
+    are hard cuts), host ``shard`` of ``n_shards`` can fetch exactly the
+    chunk objects covering its own rows — for a tensor-parallel consumer
+    that is ``1/n_shards`` of the wire bytes per host instead of every host
+    pulling the full tensor. Parameters the placement rules replicate (and
+    sub-threshold, non-chunked ones) fall back to fetching the whole value.
+    Returns the shard's raw little-endian truth bytes."""
+    if not 0 <= shard < n_shards:
+        raise ValueError(f"shard {shard} out of range for {n_shards}")
+    from repro.dist.sharding import shard_cuts
+
+    # the manifest chain must be local before chunk refs can be resolved;
+    # negotiation-style importing fetch keeps what it pulls
+    walk_manifests(_ImportingFetch(store, transport), [ref])
+    e = store.get_manifest(ref)["params"][key]
+    shape = tuple(int(d) for d in e["shape"])
+    itemsize = np.dtype(e["dtype"]).itemsize
+    nbytes = int(e.get("nbytes")
+                 or np.prod(shape, dtype=np.int64) * itemsize)
+    cuts = shard_cuts(key, shape, itemsize, n_shards)
+    bounds = [0] + (cuts or []) + [nbytes]
+    if cuts is None:
+        start, end = 0, nbytes      # replicated placement: full tensor
+    else:
+        start, end = bounds[shard], bounds[shard + 1]
+
+    if e["kind"] == "chunked":
+        needed = store.chunk_range_objects(ref, key, start, end)
+    else:
+        # sub-threshold param: walk its per-key chain (full tensor or
+        # delta blobs down to the base) — still only this key's objects
+        needed, cur = [], ref
+        while True:
+            ce = store.get_manifest(cur)["params"][key]
+            if ce["kind"] == "chunked":
+                needed += store.chunk_range_objects(
+                    cur, key, 0, int(ce["nbytes"]))
+                break
+            needed.append(ce["tensor"] if ce["kind"] == "full"
+                          else ce["blob"])
+            if ce["kind"] != "delta":
+                break
+            cur = ce["parent_ref"]
+    missing = [k for k in dict.fromkeys(needed) if not store.cas.has(k)]
+    if missing:
+        store.import_objects(fetch_objects(transport, missing))
+    return store.materialize_param_range(ref, key, start, end)

@@ -109,6 +109,16 @@ class Transport(ABC):
     def read_objects(self, keys: Sequence[str]) -> Dict[str, bytes]:
         """Fetch a batch of CAS objects by key."""
 
+    def object_sizes(self, keys: Sequence[str]
+                     ) -> Optional[Dict[str, int]]:
+        """Stored byte size per key, for the keys the remote has.
+
+        Optional capability (default: unknown → None). The pull planner
+        uses it to route large objects — chunked tensors' ``c_`` payloads
+        above all — through parallel ranged reads instead of one mget
+        stream (DESIGN.md §12)."""
+        return None
+
     @abstractmethod
     def write_objects(self, objects: Mapping[str, bytes]) -> None:
         """Store a batch of CAS objects (idempotent per key)."""
@@ -197,6 +207,10 @@ class LocalTransport(Transport):
     def read_objects(self, keys: Sequence[str]) -> Dict[str, bytes]:
         cas = self._open().cas
         return {k: cas.get_bytes(k) for k in keys}
+
+    def object_sizes(self, keys: Sequence[str]) -> Dict[str, int]:
+        cas = self._open().cas
+        return {k: cas.size(k) for k in keys if cas.has(k)}
 
     def write_objects(self, objects: Mapping[str, bytes]) -> None:
         store = self._open()

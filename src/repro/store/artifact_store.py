@@ -55,11 +55,12 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.common.hashing import bytes_hash, tensor_hash
+from repro.common.hashing import TensorHasher, bytes_hash, tensor_hash
 from repro.core.artifact import LazyParams, ModelArtifact, ParamRef
 from repro.core.graphir import LayerGraph
-from repro.store.cas import CAS
-from repro.store.codecs import get_codec
+from repro.store import chunks as chunklib
+from repro.store.cas import CAS, DEFAULT_PACK_THRESHOLD
+from repro.store.codecs import get_codec, pick_codec
 from repro.store.delta import (CompressResult, ParamDelta, decode_q,
                                decompress_param, delta_compression,
                                host_dequant, host_snapshot,
@@ -238,13 +239,34 @@ class ArtifactStore:
                  cache_budget_bytes: int = 256 * 2**20,
                  zero_frac_prefilter: float = 0.0,
                  backend: Optional[str] = None,
-                 pack_threshold: int = 256 * 2**10,
+                 pack_threshold: int = DEFAULT_PACK_THRESHOLD,
                  pipelined: bool = True,
                  fold_enabled: bool = True,
                  fold_budget_bytes: int = 256 * 2**20,
                  lzma_preset: Optional[int] = None,
-                 io_workers: Optional[int] = None) -> None:
+                 io_workers: Optional[int] = None,
+                 chunk_threshold: Optional[int] = None,
+                 chunk_window_bytes: int = chunklib.DEFAULT_WINDOW_BYTES,
+                 chunk_min: int = chunklib.DEFAULT_MIN_CHUNK,
+                 chunk_avg: int = chunklib.DEFAULT_AVG_CHUNK,
+                 chunk_max: int = chunklib.DEFAULT_MAX_CHUNK,
+                 chunk_mode: str = "cdc",
+                 chunk_shards: int = 0) -> None:
         self.cas = CAS(root, pack_threshold=pack_threshold)
+        # chunk layer (DESIGN.md §12): params >= chunk_threshold bytes are
+        # stored as content-defined chunks instead of one monolithic object;
+        # 0 disables chunking. chunk_window_bytes bounds commit/checkout
+        # in-flight memory for chunked tensors; chunk_shards > 1 aligns the
+        # chunk grid to that many axis-0 shard boundaries.
+        self.chunk_threshold = (chunklib.DEFAULT_CHUNK_THRESHOLD
+                                if chunk_threshold is None
+                                else max(0, int(chunk_threshold)))
+        self.chunk_window_bytes = int(chunk_window_bytes)
+        self.chunk_min = int(chunk_min)
+        self.chunk_avg = int(chunk_avg)
+        self.chunk_max = int(chunk_max)
+        self.chunk_mode = chunk_mode
+        self.chunk_shards = int(chunk_shards)
         self.codec = codec
         self.eps = eps
         self.t_thr = t_thr
@@ -275,7 +297,10 @@ class ArtifactStore:
         # per-store materialization accounting (reset with reset_io_stats)
         self.io_stats = {"tensors_materialized": 0, "bytes_materialized": 0,
                          "chain_hops": 0, "plans_resolved": 0,
-                         "dequant_calls": 0, "hops_folded": 0, "fold_hits": 0}
+                         "dequant_calls": 0, "hops_folded": 0, "fold_hits": 0,
+                         "chunks_written": 0, "chunk_bytes_written": 0,
+                         "chunks_deduped": 0, "chunk_delta_blobs": 0,
+                         "chunk_passthrough": 0, "chunks_read": 0}
         self._lock = threading.RLock()   # manifests dict + counters
         self._stats_path = (os.path.join(root, "store_stats.json")
                             if root else None)
@@ -335,11 +360,25 @@ class ArtifactStore:
         entries: Dict[str, Any] = {}
         depth = 0
 
+        # Chunk layer (DESIGN.md §12): params >= chunk_threshold go through
+        # the streaming chunk engine and are carved OUT of the whole-tensor
+        # delta stage — they must never be materialized as one array here.
+        param_order = list(artifact.params)
+        chunk_sources = self._chunk_candidates(artifact)
+        parent_manifest = (self.get_manifest(parent_ref)
+                           if parent_ref is not None else None)
+        if chunk_sources:
+            artifact = ModelArtifact(
+                graph=artifact.graph,
+                params={k: artifact.params[k] for k in param_order
+                        if k not in chunk_sources},
+                model_type=artifact.model_type,
+                metadata=artifact.metadata)
+
         deltas = {}
         precomputed_hashes: Dict[str, str] = {}
         commit_result: Optional[CompressResult] = None
-        if self.delta_enabled and parent_ref is not None:
-            parent_manifest = self.get_manifest(parent_ref)
+        if self.delta_enabled and parent_ref is not None and artifact.params:
             if parent_manifest["depth"] < self.max_chain_depth:
                 if self.pipelined:
                     result = self._delta_compress_pipelined(
@@ -362,6 +401,12 @@ class ArtifactStore:
                     artifact = result.reconstructed
 
         with self.cas.batch():  # one append handle per pack, one fsync
+            for key, source in chunk_sources.items():
+                entries[key] = self._commit_chunked(key, source, parent_ref,
+                                                    parent_manifest)
+            if depth == 0 and any(e.get("parent_ref")
+                                  for e in entries.values()):
+                depth = parent_manifest["depth"] + 1
             for key in artifact.params:
                 value = np.asarray(artifact.params[key])
                 # content identity for every entry (worker-precomputed for
@@ -383,8 +428,10 @@ class ArtifactStore:
                                     "shape": list(value.shape),
                                     "dtype": str(value.dtype), "hash": thash}
 
+            # delta entries always carry parent_ref; chunked entries only
+            # when at least one chunk is stored relative to the parent
             delta_parents = sorted({e["parent_ref"] for e in entries.values()
-                                    if e["kind"] == "delta"})
+                                    if e.get("parent_ref")})
             with self.cas.batched_refcounts():
                 for pref in delta_parents:
                     self.cas.incref(pref)  # parent must outlive child
@@ -547,6 +594,343 @@ class ArtifactStore:
             return dequant(state.seg_base, state.q_open, self.eps), state
         return dequant(parent_value, q32, self.eps, out_dtype=dtype), None
 
+    # -- chunk engine (DESIGN.md §12) --------------------------------------------
+    def _chunk_candidates(self, artifact: ModelArtifact
+                          ) -> "Dict[str, Any]":
+        """Params of ``artifact`` routed through the chunk layer, as sources.
+
+        Selection is metadata-only (spec/nbytes, no materialization); the
+        values are chunk sources — wrappers exposing ``read(offset, size)``
+        over raw contiguous bytes (``repro.store.chunks``)."""
+        if not self.chunk_threshold:
+            return {}
+        params = artifact.params
+        out: Dict[str, Any] = {}
+        for key in params:
+            value = params.get(key) if hasattr(params, "get") else None
+            if isinstance(params, LazyParams):
+                shape, dtype = params.spec_of(key)
+                nb = (int(np.prod(shape, dtype=np.int64)
+                          * np.dtype(dtype).itemsize) if shape
+                      else np.dtype(dtype).itemsize)
+                if nb < self.chunk_threshold:
+                    continue
+                value = params[key]  # materializes only >threshold params
+            else:
+                value = params[key]
+                nb = getattr(value, "nbytes", None)
+                if not isinstance(nb, (int, np.integer)):
+                    nb = int(np.asarray(value).nbytes)
+                if nb < self.chunk_threshold:
+                    continue
+            out[key] = chunklib.as_source(value)
+        return out
+
+    def _shard_segments(self, key: str, shape, itemsize: int):
+        """Hard chunk-grid boundaries from the mesh sharding spec, or None."""
+        if self.chunk_shards <= 1:
+            return None
+        from repro.dist.sharding import shard_cuts
+        return shard_cuts(key, shape, itemsize, self.chunk_shards)
+
+    def _chunk_parent_entry(self, key: str, parent_ref: Optional[str],
+                            parent_manifest: Optional[Dict[str, Any]],
+                            source) -> Optional[Dict[str, Any]]:
+        """The parent's chunked entry for ``key`` when its grid can be
+        inherited 1:1 (same dtype and byte length, chain depth allows)."""
+        if (parent_ref is None or parent_manifest is None
+                or not self.delta_enabled
+                or parent_manifest["depth"] >= self.max_chain_depth):
+            return None
+        pe = parent_manifest["params"].get(key)
+        if (pe is None or pe.get("kind") != "chunked"
+                or pe["dtype"] != str(np.dtype(source.dtype))
+                or int(pe["nbytes"]) != int(source.nbytes)):
+            return None
+        return pe
+
+    def _commit_chunked(self, key: str, source, parent_ref: Optional[str],
+                        parent_manifest: Optional[Dict[str, Any]]
+                        ) -> Dict[str, Any]:
+        """Stream one large param into chunk objects; return its entry.
+
+        The tensor is processed through a bounded window: chunks are read,
+        (optionally) delta-encoded against the parent's corresponding chunk
+        and written in batches sized so in-flight bytes stay within
+        ``chunk_window_bytes`` — the full tensor never exists in memory.
+        The entry's ``hash`` is the stored-truth tensor hash, accumulated
+        incrementally in chunk order (bit-identical to ``tensor_hash`` of
+        the materialized checkout).
+
+        Grid inheritance: when the parent has a chunked entry of identical
+        dtype/length, its grid is reused so chunks align 1:1 and each chunk
+        stores as (a) a reference to the parent's identical raw chunk, (b) a
+        quantized per-chunk delta blob, (c) a pass-through marker (``p``:
+        bit-identical to the parent chunk's truth), or (d) a fresh raw
+        ``c_`` object. Without an inheritable grid, content-defined (or
+        fixed) boundaries are computed and every chunk stores raw."""
+        dtype = np.dtype(source.dtype)
+        shape = tuple(int(d) for d in source.shape)
+        nbytes = int(source.nbytes)
+        pe = self._chunk_parent_entry(key, parent_ref, parent_manifest,
+                                      source)
+        parent_chain = None
+        if pe is not None:
+            cuts = np.cumsum([int(it["n"]) for it in pe["chunks"]]).tolist()
+            parent_chain = self._chunk_chain(parent_ref, key)
+        else:
+            cuts = chunklib.cut_points(
+                source.read, nbytes, dtype.itemsize,
+                min_size=self.chunk_min, avg_size=self.chunk_avg,
+                max_size=self.chunk_max, mode=self.chunk_mode,
+                segments=self._shard_segments(key, shape, dtype.itemsize))
+        spans = chunklib.spans_of(cuts)
+        delta_f32 = parent_chain is not None and dtype == np.float32
+        cod = self._codec_obj
+        hasher = TensorHasher(shape, dtype)
+        items: List[Optional[Dict[str, Any]]] = [None] * len(spans)
+
+        def process(idx: int):
+            """Worker: returns (tag, meta, payload, truth_bytes)."""
+            off, n = spans[idx]
+            data = bytes(source.read(off, n))
+            ckey = "c_" + bytes_hash(data)
+            if delta_f32:
+                pitem = pe["chunks"][idx]
+                if pitem.get("c") == ckey:
+                    return ("c", ckey, data, data)  # identical raw chunk
+                pbytes = self._chunk_value(parent_chain, idx)
+                if data == pbytes:
+                    # identical truth, but the parent chunk has no raw
+                    # object of its own — record a pass-through
+                    return ("p", None, None, data)
+                child = np.frombuffer(data, dtype=np.float32)
+                parent = np.frombuffer(pbytes, dtype=np.float32)
+                q, nz, _narrow = host_snapshot(parent, child, self.eps)
+                # density is free from the snapshot kernel: ultra-sparse
+                # chunks (edit stragglers) switch to the sparse codec
+                ccod = pick_codec(int(nz), q.size, cod)
+                blob = ccod.encode(q)
+                if len(blob) < n:
+                    truth = host_dequant(parent, q, self.eps).tobytes()
+                    if truth == pbytes:
+                        return ("p", None, None, truth)
+                    return ("b", (str(q.dtype), ccod.name), blob, truth)
+            return ("c", ckey, data, data)
+
+        # Bounded fan-out: each in-flight chunk holds ~4x its bytes (child,
+        # parent, q, blob), so batches of window/(4*max_chunk) keep peak
+        # in-flight memory within the configured window.
+        max_len = max(n for _, n in spans)
+        batch = max(1, self.chunk_window_bytes // max(1, 4 * max_len))
+        use_pool = (self.io_workers > 1 and batch > 1 and len(spans) > 1)
+        for lo in range(0, len(spans), batch):
+            idxs = list(range(lo, min(len(spans), lo + batch)))
+            if use_pool and len(idxs) > 1:
+                results = list(self._executor().map(process, idxs))
+            else:
+                results = [process(i) for i in idxs]
+            for idx, (tag, meta, payload, truth) in zip(idxs, results):
+                n = spans[idx][1]
+                hasher.update(truth)
+                if tag == "c":
+                    had = self.cas.has(meta)
+                    self.cas.put_bytes(payload, key=meta)
+                    items[idx] = {"c": meta, "n": n}
+                    with self._lock:
+                        self.io_stats["chunks_written"] += 1
+                        if had:
+                            self.io_stats["chunks_deduped"] += 1
+                        else:
+                            self.io_stats["chunk_bytes_written"] += n
+                elif tag == "b":
+                    bkey = self.cas.put_bytes(payload)
+                    qdtype, codname = meta
+                    items[idx] = {"b": bkey, "n": n, "q": qdtype}
+                    if codname != self.codec:
+                        items[idx]["k"] = codname
+                    with self._lock:
+                        self.io_stats["chunk_delta_blobs"] += 1
+                        self.io_stats["chunk_bytes_written"] += len(payload)
+                else:
+                    items[idx] = {"p": 1, "n": n}
+                    with self._lock:
+                        self.io_stats["chunk_passthrough"] += 1
+
+        entry: Dict[str, Any] = {"kind": "chunked",
+                                 "hash": hasher.hexdigest(),
+                                 "shape": list(shape), "dtype": str(dtype),
+                                 "nbytes": nbytes, "chunks": items}
+        if pe is not None and any("b" in it or "p" in it for it in items):
+            # at least one chunk is stored relative to the parent: record
+            # the chain link (and the decode parameters shared by all blobs)
+            entry.update({"parent_ref": parent_ref, "parent_key": key,
+                          "eps": self.eps, "codec": self.codec})
+        return entry
+
+    def _chunk_chain(self, ref: str, key: str) -> List[Dict[str, Any]]:
+        """Chunked entries child-first along parent links (cycle-checked)."""
+        chain: List[Dict[str, Any]] = []
+        cur_ref, cur_key = ref, key
+        seen = set()
+        while True:
+            if (cur_ref, cur_key) in seen:
+                raise RuntimeError(
+                    f"chunk chain cycle at {cur_ref!r}:{cur_key!r}")
+            seen.add((cur_ref, cur_key))
+            e = self._entry(cur_ref, cur_key)
+            if e.get("kind") != "chunked":
+                raise RuntimeError(
+                    f"chunk chain of {ref!r}:{key!r} reaches non-chunked "
+                    f"entry at {cur_ref!r}:{cur_key!r} (corrupt manifest)")
+            chain.append(e)
+            if not e.get("parent_ref"):
+                return chain
+            cur_ref, cur_key = e["parent_ref"], e["parent_key"]
+
+    def _chunk_value(self, chain: List[Dict[str, Any]], idx: int) -> bytes:
+        """Raw truth bytes of chunk ``idx`` of ``chain[0]``'s tensor.
+
+        Walks down the chain until a raw ``c`` item, then applies the
+        recorded per-chunk dequant hops back up (``p`` items copy through).
+        Chunk reads bypass the mmap pool: checkout of a huge tensor must
+        not charge mapped pages to the process RSS high-water mark."""
+        level = 0
+        hops: List[Tuple[Dict[str, Any], Dict[str, Any]]] = []
+        while True:
+            e = chain[level]
+            item = e["chunks"][idx]
+            if "c" in item:
+                base = self.cas.get_bytes_nomap(item["c"])
+                break
+            if "p" in item:
+                level += 1
+                continue
+            hops.append((e, item))
+            level += 1
+        with self._lock:
+            self.io_stats["chunks_read"] += 1
+        if not hops:
+            return base
+        value = np.frombuffer(base, dtype=np.float32)
+        for e, item in reversed(hops):
+            blob = self.cas.get_bytes_nomap(item["b"])
+            n = int(item["n"]) // 4
+            # per-item ``k`` overrides the entry codec (density-adaptive
+            # sparse pick at commit time); absent means the entry default
+            q = get_codec(item.get("k", e["codec"])).decode(
+                blob, n, dtype=item.get("q", "int32"))
+            value = host_dequant(value, q, float(e["eps"]))
+            with self._lock:
+                self.io_stats["dequant_calls"] += 1
+                self.io_stats["chain_hops"] += 1
+        return value.tobytes()
+
+    def _materialize_chunked(self, ref: str, key: str) -> np.ndarray:
+        """Decode a chunked param into one preallocated destination array."""
+        e = self._entry(ref, key)
+        chain = self._chunk_chain(ref, key)
+        spans = chunklib.spans_of(
+            np.cumsum([int(it["n"]) for it in e["chunks"]]).tolist())
+        out = np.empty(tuple(e["shape"]), dtype=np.dtype(e["dtype"]))
+        flat = out.reshape(-1).view(np.uint8)
+
+        def fill(idx: int) -> None:
+            off, n = spans[idx]
+            flat[off:off + n] = np.frombuffer(
+                self._chunk_value(chain, idx), dtype=np.uint8)
+
+        # Fan out only from a non-pool thread (pool workers must never
+        # submit back into the shared pool — materialize_artifact already
+        # parallelizes across params); writes hit disjoint slices.
+        on_pool = threading.current_thread().name.startswith(
+            "artifact-store-io")
+        if not on_pool and self.io_workers > 1 and len(spans) > 2:
+            list(self._executor().map(fill, range(len(spans))))
+        else:
+            for i in range(len(spans)):
+                fill(i)
+        out.flags.writeable = False
+        self._count_materialization(out)
+        return out
+
+    def stream_param(self, ref: str, key: str):
+        """Yield ``(offset, bytes)`` covering one param's raw bytes in order.
+
+        For chunked entries this is the bounded-memory checkout path — one
+        chunk's truth is in flight at a time; non-chunked entries yield a
+        single span (they are sub-threshold by construction)."""
+        e = self._entry(ref, key)
+        if e.get("kind") != "chunked":
+            v = np.ascontiguousarray(self.materialize_param(ref, key))
+            yield 0, v.tobytes()
+            return
+        chain = self._chunk_chain(ref, key)
+        spans = chunklib.spans_of(
+            np.cumsum([int(it["n"]) for it in e["chunks"]]).tolist())
+        for idx, (off, _n) in enumerate(spans):
+            yield off, self._chunk_value(chain, idx)
+
+    def materialize_param_to_file(self, ref: str, key: str,
+                                  path: str) -> str:
+        """Streaming checkout of one param into a raw little-endian file.
+
+        Returns the tensor hash of the bytes written (accumulated
+        incrementally); equal to the manifest entry's ``hash`` iff the
+        checkout is bit-identical to the committed truth."""
+        e = self._entry(ref, key)
+        hasher = TensorHasher(tuple(e["shape"]), e["dtype"])
+        with open(path, "wb") as f:
+            for _off, data in self.stream_param(ref, key):
+                f.write(data)
+                hasher.update(data)
+        return hasher.hexdigest()
+
+    def chunk_range_objects(self, ref: str, key: str, start: int,
+                            end: int) -> List[str]:
+        """CAS keys needed to reconstruct bytes [start, end) of a chunked
+        param — the shard-scoped fetch set (DESIGN.md §12): a distributed
+        consumer asks only for the chunks overlapping its shard."""
+        e = self._entry(ref, key)
+        if e.get("kind") != "chunked":
+            raise ValueError(f"{ref!r}:{key!r} is not chunked")
+        chain = self._chunk_chain(ref, key)
+        spans = chunklib.spans_of(
+            np.cumsum([int(it["n"]) for it in e["chunks"]]).tolist())
+        needed: List[str] = []
+        for idx, (off, n) in enumerate(spans):
+            if off + n <= start or off >= end:
+                continue
+            level = 0
+            while True:
+                item = chain[level]["chunks"][idx]
+                if "c" in item:
+                    needed.append(item["c"])
+                    break
+                if "b" in item:
+                    needed.append(item["b"])
+                level += 1
+        return needed
+
+    def materialize_param_range(self, ref: str, key: str, start: int,
+                                end: int) -> bytes:
+        """Truth bytes [start, end) of a chunked param (shard checkout)."""
+        e = self._entry(ref, key)
+        if e.get("kind") != "chunked":
+            v = np.ascontiguousarray(self.materialize_param(ref, key))
+            return memoryview(v).cast("B")[start:end].tobytes()
+        chain = self._chunk_chain(ref, key)
+        spans = chunklib.spans_of(
+            np.cumsum([int(it["n"]) for it in e["chunks"]]).tolist())
+        out = bytearray(end - start)
+        for idx, (off, n) in enumerate(spans):
+            if off + n <= start or off >= end:
+                continue
+            data = self._chunk_value(chain, idx)
+            s, t = max(start, off), min(end, off + n)
+            out[s - start:t - start] = data[s - off:t - off]
+        return bytes(out)
+
     # -- manifests ----------------------------------------------------------------
     def get_manifest(self, ref: str) -> Dict[str, Any]:
         with self._lock:
@@ -574,7 +958,9 @@ class ArtifactStore:
         visited set — NOT this store's max_chain_depth: the store may have
         been reopened with a smaller depth knob than the one the chain was
         written with, and that is valid data. Ends after the first
-        ``full``-kind entry; callers early-exit by breaking."""
+        non-``delta`` entry (``full``, or a ``chunked`` chain base — chunked
+        entries resolve through the chunk engine, not this walk); callers
+        early-exit by breaking."""
         cur_ref, cur_key = ref, key
         seen = set()
         while True:
@@ -585,7 +971,7 @@ class ArtifactStore:
             seen.add((cur_ref, cur_key))
             e = self._entry(cur_ref, cur_key)
             yield cur_ref, cur_key, e
-            if e["kind"] == "full":
+            if e["kind"] != "delta":
                 return
             cur_ref, cur_key = e["parent_ref"], e["parent_key"]
 
@@ -604,6 +990,11 @@ class ArtifactStore:
                                           tuple(reversed(hops)))
             if e["kind"] == "full":
                 return ReconstructionPlan("full", e["tensor"],
+                                          tuple(reversed(hops)))
+            if e["kind"] == "chunked":
+                # chunked chain base: materialized by the chunk engine, so
+                # downstream it behaves like an already-cached value
+                return ReconstructionPlan("chunked", (cur_ref, cur_key),
                                           tuple(reversed(hops)))
             hops.append(self._hop_of(e, cur_ref, cur_key))
 
@@ -635,6 +1026,13 @@ class ArtifactStore:
             self.io_stats["plans_resolved"] += 1
         pending: List[DeltaHop] = []
         for cur_ref, cur_key, e in self._walk_entries(ref, key):
+            if e["kind"] == "chunked":
+                # chunk-engine base for a delta chain built on top of a
+                # chunked param: materialize it (cached) as a value origin
+                v = self.cache.get((cur_ref, cur_key))
+                if v is None:
+                    v = self.materialize_param(cur_ref, cur_key)
+                return ("value", v), pending
             if e["kind"] == "full":
                 if pending:
                     v = self.cache.get((cur_ref, cur_key))
@@ -774,6 +1172,11 @@ class ArtifactStore:
         cached = self.cache.get((ref, key))
         if cached is not None:
             return cached
+        e = self._entry(ref, key)
+        if e["kind"] == "chunked":
+            value = self._materialize_chunked(ref, key)
+            self.cache.put((ref, key), value)
+            return value
         value, state = self._materialize_with_state(ref, key, plan=plan)
         self.cache.put((ref, key), value)
         if state is not None:
@@ -888,6 +1291,10 @@ class ArtifactStore:
         for key, e in manifest["params"].items():
             if e["kind"] == "full":
                 params[key] = self.cas.get_tensor(e["tensor"])
+                states[key] = None
+                continue
+            if e["kind"] == "chunked":
+                params[key] = self._materialize_chunked(ref, key)
                 states[key] = None
                 continue
             pref = e["parent_ref"]
@@ -1050,18 +1457,49 @@ class ArtifactStore:
         Extends :meth:`CAS.fsck` with: ``missing_objects`` (keys the manifest
         closure of ``roots`` references but the CAS lacks) and
         ``refcount_drift`` (``{key: [actual, expected]}``; undercounts risk
-        premature collection, overcounts only delay it)."""
+        premature collection, overcounts only delay it).
+
+        For chunked params, damage is pinpointed: ``chunk_damage`` maps each
+        corrupt/missing chunk object back to ``(ref, param, chunk index)``,
+        so a single bad chunk identifies exactly which slice of which tensor
+        is lost rather than condemning the whole multi-GB object."""
         report = self.cas.fsck()
         closure, missing_refs = self.manifest_closure(roots)
         expected = self.expected_refcounts(roots)
+        # has() treats a refcounted key as present even when its object file
+        # is gone (the refcount table is authoritative for liveness, not
+        # bytes) — the CAS pass reports those as dangling refs; reachable
+        # ones are missing objects from the manifest graph's point of view
         missing = sorted(set(missing_refs)
-                         | {k for k in expected if not self.cas.has(k)})
+                         | {k for k in expected if not self.cas.has(k)}
+                         | (set(report["dangling_refs"]) & set(expected)))
         drift = {k: [self.cas.refcounts.get(k, 0), v]
                  for k, v in expected.items()
                  if self.cas.has(k) and self.cas.refcounts.get(k, 0) != v}
+        bad = set(report["corrupt"]) | set(missing)
+        chunk_damage: List[Dict[str, Any]] = []
+        if bad:
+            for mref in closure:
+                try:
+                    manifest = self.get_manifest(mref)
+                except Exception:
+                    continue
+                for pkey, e in manifest["params"].items():
+                    if e.get("kind") != "chunked":
+                        continue
+                    for i, item in enumerate(e["chunks"]):
+                        k = item.get("c") or item.get("b")
+                        if k and k in bad:
+                            chunk_damage.append(
+                                {"ref": mref, "param": pkey, "chunk": i,
+                                 "object": k,
+                                 "problem": ("corrupt"
+                                             if k in report["corrupt"]
+                                             else "missing")})
         report["manifests_reachable"] = len(closure)
         report["missing_objects"] = missing
         report["refcount_drift"] = drift
+        report["chunk_damage"] = chunk_damage
         report["ok"] = bool(report["ok"] and not missing and not drift)
         return report
 
@@ -1074,8 +1512,16 @@ class ArtifactStore:
             return
         with self.cas.batched_refcounts():  # ONE durable write for the lot
             for e in manifest["params"].values():
-                self.cas.decref(e["tensor"] if e["kind"] == "full"
-                                else e["blob"])
+                if e["kind"] == "chunked":
+                    # mirror of commit/parse_manifest accounting: one ref
+                    # per chunk object occurrence (pass-throughs own none)
+                    for item in e["chunks"]:
+                        k = item.get("c") or item.get("b")
+                        if k:
+                            self.cas.decref(k)
+                else:
+                    self.cas.decref(e["tensor"] if e["kind"] == "full"
+                                    else e["blob"])
             for pref in manifest.get("delta_parents", []):
                 self.cas.decref(pref)
             self.cas.decref(ref)

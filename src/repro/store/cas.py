@@ -16,7 +16,18 @@ Key schemes (DESIGN.md §3.2, §9.1, §9.3 — ``fsck`` verifies each):
   legally change bytes under a key;
 * ``s_<bytes_hash>`` — scoped content keys (``diag/transfer.py``): the hash
   of a submodule's parameter *hashes*, used as the ledger's manifest_key
-  for scope-declared tests. Derived, never stored as an object itself.
+  for scope-declared tests. Derived, never stored as an object itself;
+* ``c_<bytes_hash>`` — tensor chunks (DESIGN.md §12): raw little-endian
+  element bytes of one content-defined chunk of a large tensor, hash of
+  exactly the stored bytes. No container framing, so ranged/zero-copy
+  reads serve chunk payloads directly.
+
+The loose/packed placement split is keyed on one constant:
+``DEFAULT_PACK_THRESHOLD`` (256 KiB). Objects at or above it get a loose
+file (mmap-able, ranged-readable); smaller ones append into packs. Every
+layer (bare ``CAS()``, ``ArtifactStore``) shares this default — it used to
+drift (4096 here vs 256 KiB above), which silently changed placement for
+anyone instantiating a bare CAS.
 
 What is stored is always the *stored form* of an artifact: committing
 delta-quantizes against the parent, so the persisted model differs from the
@@ -75,6 +86,10 @@ _REC_HEAD = struct.Struct("<HI")  # (keylen, datalen)
 _MMAP_POOL_MAX = 64  # mapped files kept open; evicted maps stay valid for
                      # outstanding views (the arrays keep the mmap alive)
 
+# Loose/packed placement boundary, shared by CAS and ArtifactStore (see the
+# key-scheme docstring above).
+DEFAULT_PACK_THRESHOLD = 256 * 2 ** 10
+
 
 def _tensor_from_npy_view(view: memoryview) -> Optional[np.ndarray]:
     """Decode an npy stream as a zero-copy array over ``view``.
@@ -114,11 +129,14 @@ def ledger_key(test_hash: str, manifest_key: str) -> str:
 
 class CAS:
     def __init__(self, root: Optional[str] = None,
-                 pack_threshold: int = 4096,
-                 pack_max_bytes: int = 64 * 2**20) -> None:
+                 pack_threshold: int = DEFAULT_PACK_THRESHOLD,
+                 pack_max_bytes: int = 64 * 2**20,
+                 mmap_pool_max: Optional[int] = None) -> None:
         self.root = root
         self.pack_threshold = pack_threshold
         self.pack_max_bytes = pack_max_bytes
+        self._mmap_pool_max = (_MMAP_POOL_MAX if mmap_pool_max is None
+                               else max(1, int(mmap_pool_max)))
         self._mem: Dict[str, bytes] = {}
         self.refcounts: Dict[str, int] = {}
         self._lock = threading.RLock()
@@ -400,7 +418,7 @@ class CAS:
             # arrays holding views keep the mapping alive until they die
             self._mmap_pool[path] = (mm, size)
             self._mmap_pool.move_to_end(path)
-            while len(self._mmap_pool) > _MMAP_POOL_MAX:
+            while len(self._mmap_pool) > self._mmap_pool_max:
                 self._mmap_pool.popitem(last=False)
             return mm
 
@@ -482,6 +500,26 @@ class CAS:
         mm = self._map_file(path, size) if size else None
         if mm is not None:
             return mm[:size]
+        return self._read_loose(key)
+
+    def get_bytes_nomap(self, key: str) -> bytes:
+        """Object bytes via plain ``read()``, bypassing the mmap pool.
+
+        The chunk streaming paths (DESIGN.md §12) use this: mapped pages are
+        charged to the process RSS high-water mark, so a bounded-memory
+        checkout of a multi-GB tensor must not page its chunks through
+        long-lived maps. Plain reads copy through the kernel page cache,
+        which is reclaimable and not part of ``ru_maxrss``."""
+        self.stats["gets"] += 1
+        if self.root is None:
+            try:
+                return self._mem[key]
+            except KeyError:
+                raise KeyError(f"no object {key!r} in CAS")
+        entry = self._pack_index.get(key)
+        if entry is not None:
+            pid, off, length = entry
+            return self._read_packed(pid, off, length)
         return self._read_loose(key)
 
     def size(self, key: str) -> int:
@@ -668,14 +706,17 @@ class CAS:
     def _verify_key(self, key: str, data: bytes) -> bool:
         """Check ``data`` reproduces its content-address ``key``.
 
-        Four key schemes exist (DESIGN.md §3.2, §9.1): manifests are
-        ``"m_" + bytes_hash(payload)``; diagnostics ledger entries are
+        Five key schemes exist (DESIGN.md §3.2, §9.1, §12): manifests are
+        ``"m_" + bytes_hash(payload)``; chunks are ``"c_" + bytes_hash(raw
+        chunk bytes)``; diagnostics ledger entries are
         ``"t_" + bytes_hash(test_hash NUL manifest_key)`` re-derived from
         the payload's embedded pair; delta blobs and raw objects are
         ``bytes_hash(data)``; tensors are ``tensor_hash(arr)`` — a hash over
         (shape, dtype, raw bytes), NOT over the serialized npy stream — so
         tensor keys need a decode round-trip to re-derive."""
         if key.startswith("m_"):
+            return bytes_hash(data) == key[2:]
+        if key.startswith("c_"):
             return bytes_hash(data) == key[2:]
         if key.startswith("t_"):
             try:

@@ -134,6 +134,26 @@ CODECS: Dict[str, Codec] = {
     "sparse": SparseCodec(),
 }
 
+#: nonzero density below which ``sparse`` reliably beats the run-based
+#: codecs on quantized deltas (bench_compression's crossover, with margin)
+SPARSE_DENSITY = 0.05
+
+
+def pick_codec(nonzeros: int, n: int, default: Codec) -> Codec:
+    """Density-adaptive codec choice for one quantized delta.
+
+    Chunk-level delta encoding (DESIGN.md §12) makes density wildly
+    non-uniform *within* one tensor: chunks near a localized edit are dense
+    while the rest of the touched chunks carry a handful of stragglers. The
+    nonzero count comes out of the snapshot kernel for free, so each blob
+    can pick ``sparse`` below the crossover instead of paying the whole-
+    tensor compromise codec. Whole-tensor delta blobs keep ``default``
+    unconditionally — their density already informed the store-level codec
+    configuration."""
+    if n > 0 and nonzeros / n < SPARSE_DENSITY:
+        return CODECS["sparse"]
+    return default
+
 _TUNED: Dict[tuple, Codec] = {}
 
 

@@ -31,11 +31,26 @@ class ManifestInfo:
 def parse_manifest(data: bytes) -> ManifestInfo:
     manifest = json.loads(data)
     objects: List[str] = []
+    parents_set = set()
     for e in manifest["params"].values():
-        objects.append(e["tensor"] if e["kind"] == "full" else e["blob"])
-    parents = sorted({e["parent_ref"] for e in manifest["params"].values()
-                      if e["kind"] == "delta"})
-    return ManifestInfo(objects=objects, parents=parents,
+        kind = e["kind"]
+        if kind == "chunked":
+            # one occurrence per chunk item that owns an object: raw chunks
+            # (``c``) and per-chunk delta blobs (``b``); pass-through items
+            # (``p``) reference no object. Listing chunk keys here is what
+            # makes have/want negotiation chunk-granular for free.
+            for item in e["chunks"]:
+                if "c" in item:
+                    objects.append(item["c"])
+                elif "b" in item:
+                    objects.append(item["b"])
+            if e.get("parent_ref"):
+                parents_set.add(e["parent_ref"])
+        else:
+            objects.append(e["tensor"] if kind == "full" else e["blob"])
+            if kind == "delta":
+                parents_set.add(e["parent_ref"])
+    return ManifestInfo(objects=objects, parents=sorted(parents_set),
                         depth=int(manifest.get("depth", 0)))
 
 

@@ -1,0 +1,387 @@
+"""Chunk layer (DESIGN.md §12): CDC boundaries, chunked commit/checkout,
+chunk-granular dedup/fsck/sync, shard-scoped fetch, ranged transfer."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import LayerGraph, LayerNode, LineageGraph, ModelArtifact
+from repro.store import ArtifactStore, CAS
+from repro.store import chunks as chunklib
+from repro.common.hashing import tensor_hash
+from repro.remote.sync import fetch_objects, fetch_param_shard
+from repro.remote.transport import LocalTransport
+
+# small grid so multi-chunk behavior shows on test-sized tensors
+CHUNK_KW = dict(chunk_threshold=64 * 1024, chunk_min=16 * 1024,
+                chunk_avg=32 * 1024, chunk_max=64 * 1024)
+
+
+def big_artifact(seed=0, rows=256, cols=300):
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((rows, cols)).astype(np.float32)
+    g = LayerGraph.chain([LayerNode("big", "linear",
+                                    params={"w": ((rows, cols), "float32")})])
+    return ModelArtifact(g, {"big/w": w}), w
+
+
+def edit(w, frac=0.001, seed=1):
+    """Localized edit touching ``frac`` of the elements."""
+    rng = np.random.default_rng(seed)
+    out = w.copy()
+    n = max(1, int(w.size * frac))
+    start = rng.integers(0, w.size - n)
+    out.reshape(-1)[start:start + n] += 0.5
+    return out
+
+
+# ---------------------------------------------------------------------------
+# content-defined chunking
+# ---------------------------------------------------------------------------
+
+def _mem_read(data):
+    return lambda off, n: data[off:off + n]
+
+
+def test_cut_points_invariants():
+    rng = np.random.default_rng(0)
+    data = rng.integers(0, 256, size=500_000, dtype=np.uint8).tobytes()
+    cuts = chunklib.cut_points(_mem_read(data), len(data), 4,
+                               min_size=8 * 1024, avg_size=16 * 1024,
+                               max_size=64 * 1024, mode="cdc", segments=None)
+    assert cuts[-1] == len(data)
+    assert cuts == sorted(set(cuts))
+    spans = chunklib.spans_of(cuts)
+    for off, n in spans[:-1]:           # last chunk may undershoot min
+        assert 8 * 1024 <= n <= 64 * 1024
+        assert n % 4 == 0               # itemsize-aligned
+    # deterministic: same bytes, same grid
+    assert cuts == chunklib.cut_points(
+        _mem_read(data), len(data), 4, min_size=8 * 1024,
+        avg_size=16 * 1024, max_size=64 * 1024, mode="cdc", segments=None)
+
+
+def test_cut_points_boundary_stability_under_prefix_shift():
+    """The CDC property: content far from an insertion keeps its cuts."""
+    rng = np.random.default_rng(1)
+    tail = rng.integers(0, 256, size=400_000, dtype=np.uint8).tobytes()
+    a = rng.integers(0, 256, size=64, dtype=np.uint8).tobytes() + tail
+    b = rng.integers(0, 256, size=4096, dtype=np.uint8).tobytes() + tail
+    kw = dict(min_size=8 * 1024, avg_size=16 * 1024, max_size=64 * 1024,
+              mode="cdc", segments=None)
+    cuts_a = chunklib.cut_points(_mem_read(a), len(a), 1, **kw)
+    cuts_b = chunklib.cut_points(_mem_read(b), len(b), 1, **kw)
+    # cuts are content-anchored: tail cuts realign modulo the shift
+    tail_a = {c - 64 for c in cuts_a if c > 70_000}
+    tail_b = {c - 4096 for c in cuts_b if c > 70_000}
+    common = tail_a & tail_b
+    assert len(common) >= 0.8 * max(1, len(tail_a))
+
+
+def test_segments_are_hard_cuts():
+    data = bytes(range(256)) * 2048          # 512 KiB, highly regular
+    seg = [200_000, 400_000]
+    cuts = chunklib.cut_points(_mem_read(data), len(data), 4,
+                               min_size=8 * 1024, avg_size=16 * 1024,
+                               max_size=64 * 1024, mode="fixed",
+                               segments=seg)
+    assert set(seg) <= set(cuts)
+
+
+def test_fixed_mode_grid():
+    data = bytes(1_000_000)
+    cuts = chunklib.cut_points(_mem_read(data), len(data), 4,
+                               min_size=8 * 1024, avg_size=32 * 1024,
+                               max_size=64 * 1024, mode="fixed",
+                               segments=None)
+    spans = chunklib.spans_of(cuts)
+    assert all(n == 32 * 1024 for _, n in spans[:-1])
+    assert sum(n for _, n in spans) == len(data)
+
+
+# ---------------------------------------------------------------------------
+# chunked commit / checkout
+# ---------------------------------------------------------------------------
+
+def test_chunked_commit_checkout_bit_identity(tmp_path):
+    store = ArtifactStore(root=str(tmp_path), **CHUNK_KW)
+    art, w = big_artifact()
+    ref = store.commit_artifact("m", art)
+    e = store.get_manifest(ref)["params"]["big/w"]
+    assert e["kind"] == "chunked" and len(e["chunks"]) > 1
+    assert e["hash"] == tensor_hash(w)
+    got = store.materialize_param(ref, "big/w")
+    np.testing.assert_array_equal(got, w)
+    # the lazy-load path and the recursive path agree
+    lazy = store.load_artifact(ref)
+    assert lazy.params.spec_of("big/w") == (w.shape, "float32")
+    np.testing.assert_array_equal(np.asarray(lazy.params["big/w"]), w)
+
+
+def test_chunked_dedup_on_small_edit(tmp_path):
+    store = ArtifactStore(root=str(tmp_path), **CHUNK_KW)
+    art, w = big_artifact()
+    r1 = store.commit_artifact("m", art)
+    before = store.cas.physical_bytes()
+    w2 = edit(w, frac=0.001)
+    art2 = ModelArtifact(art.graph, {"big/w": w2})
+    r2 = store.commit_artifact("m", art2, parent_ref=r1)
+    added = store.cas.physical_bytes() - before
+    assert added < 0.05 * w.nbytes, f"0.1% edit re-stored {added} bytes"
+    np.testing.assert_array_equal(
+        store.materialize_param(r2, "big/w"),
+        store._materialize_chunked(r2, "big/w"))
+    e2 = store.get_manifest(r2)["params"]["big/w"]
+    kinds = {("c" if "c" in it else "b" if "b" in it else "p")
+             for it in e2["chunks"]}
+    assert e2.get("parent_ref") == r1
+    assert "c" in kinds or "p" in kinds   # untouched chunks were not re-sent
+
+
+def test_chunked_streaming_and_range(tmp_path):
+    store = ArtifactStore(root=str(tmp_path), **CHUNK_KW)
+    art, w = big_artifact()
+    ref = store.commit_artifact("m", art)
+    raw = w.tobytes()
+    # stream covers the tensor in order
+    got = bytearray(len(raw))
+    for off, data in store.stream_param(ref, "big/w"):
+        got[off:off + len(data)] = data
+    assert bytes(got) == raw
+    # file checkout digest equals the entry hash (bit-identity marker)
+    path = str(tmp_path / "w.bin")
+    digest = store.materialize_param_to_file(ref, "big/w", path)
+    assert digest == store.get_manifest(ref)["params"]["big/w"]["hash"]
+    with open(path, "rb") as f:
+        assert f.read() == raw
+    # arbitrary byte range
+    assert store.materialize_param_range(ref, "big/w", 100, 70_000) == \
+        raw[100:70_000]
+
+
+def test_chunked_release_gc_leaves_nothing(tmp_path):
+    store = ArtifactStore(root=str(tmp_path), **CHUNK_KW)
+    art, w = big_artifact()
+    r1 = store.commit_artifact("m", art)
+    art2 = ModelArtifact(art.graph, {"big/w": edit(w)})
+    r2 = store.commit_artifact("m", art2, parent_ref=r1)
+    store.release(r2)
+    store.release(r1)
+    store.cas.gc()
+    assert store.cas.object_count() == 0
+
+
+def test_sub_threshold_params_unchanged(tmp_path):
+    """Small tensors never chunk; chunking off reproduces the old layout."""
+    store = ArtifactStore(root=str(tmp_path), **CHUNK_KW)
+    art, _ = big_artifact(rows=16, cols=16)   # 1 KiB, far below threshold
+    ref = store.commit_artifact("m", art)
+    assert store.get_manifest(ref)["params"]["big/w"]["kind"] == "full"
+    off = ArtifactStore(root=str(tmp_path / "off"), chunk_threshold=0)
+    art2, _ = big_artifact()
+    ref2 = off.commit_artifact("m", art2)
+    assert off.get_manifest(ref2)["params"]["big/w"]["kind"] == "full"
+
+
+# ---------------------------------------------------------------------------
+# fsck pinpoints chunk damage
+# ---------------------------------------------------------------------------
+
+def _loose_chunk_store(tmp_path):
+    """Chunk objects land loose (tiny pack threshold) so tests can corrupt
+    a single chunk file on disk."""
+    return ArtifactStore(root=str(tmp_path), pack_threshold=1024, **CHUNK_KW)
+
+
+def test_fsck_pinpoints_corrupt_chunk(tmp_path):
+    store = _loose_chunk_store(tmp_path)
+    art, _ = big_artifact()
+    ref = store.commit_artifact("m", art)
+    e = store.get_manifest(ref)["params"]["big/w"]
+    victim = next(it["c"] for it in e["chunks"] if "c" in it)
+    vpath = os.path.join(str(tmp_path), "objects", victim)
+    data = bytearray(open(vpath, "rb").read())
+    data[len(data) // 2] ^= 0xFF
+    open(vpath, "wb").write(bytes(data))
+
+    report = store.fsck([ref])
+    assert victim in report["corrupt"]
+    damage = [d for d in report["chunk_damage"] if d["object"] == victim]
+    assert damage and damage[0]["ref"] == ref
+    assert damage[0]["param"] == "big/w"
+    assert damage[0]["problem"] == "corrupt"
+    # the hit names exactly the bad chunk's index, not the whole tensor
+    idx = damage[0]["chunk"]
+    assert e["chunks"][idx]["c"] == victim
+    healthy = [d for d in report["chunk_damage"] if d["object"] != victim]
+    assert not healthy
+
+
+def test_fsck_detects_dangling_chunk_ref(tmp_path):
+    store = _loose_chunk_store(tmp_path)
+    art, _ = big_artifact(seed=3)
+    ref = store.commit_artifact("m", art)
+    e = store.get_manifest(ref)["params"]["big/w"]
+    victim = next(it["c"] for it in e["chunks"] if "c" in it)
+    os.remove(os.path.join(str(tmp_path), "objects", victim))
+
+    report = store.fsck([ref])
+    assert not report["ok"]
+    assert victim in report["missing_objects"]
+    damage = [d for d in report["chunk_damage"] if d["object"] == victim]
+    assert damage and damage[0]["problem"] == "missing"
+
+
+def test_fsck_clean_chunked_repo_ok(tmp_path):
+    store = ArtifactStore(root=str(tmp_path), **CHUNK_KW)
+    art, w = big_artifact()
+    r1 = store.commit_artifact("m", art)
+    r2 = store.commit_artifact(
+        "m", ModelArtifact(art.graph, {"big/w": edit(w)}), parent_ref=r1)
+    report = store.fsck([r1, r2])
+    assert report["ok"] and not report["chunk_damage"]
+    assert not report["refcount_drift"]
+
+
+# ---------------------------------------------------------------------------
+# mmap pool eviction leaves outstanding views valid
+# ---------------------------------------------------------------------------
+
+def test_mmap_pool_eviction_keeps_views_alive(tmp_path):
+    cas = CAS(str(tmp_path), pack_threshold=10 ** 9, mmap_pool_max=2)
+    arrays = {f"t{i}": np.full(4096, i, dtype=np.float32) for i in range(8)}
+    keys = {name: cas.put_tensor(arr) for name, arr in arrays.items()}
+    # hold zero-copy views of every object while the pool (capacity 2)
+    # evicts the earlier maps many times over
+    views = {name: cas.get_tensor(keys[name]) for name in arrays}
+    raw = {name: cas.get_view(keys[name]) for name in arrays}
+    assert len(cas._mmap_pool) <= 2
+    for name, arr in arrays.items():
+        np.testing.assert_array_equal(views[name], arr)   # evicted map alive
+        # the raw view is the stored npy payload; it must still read
+        # correctly even though its backing map was evicted from the pool
+        assert bytes(raw[name]) == cas.get_bytes_nomap(keys[name])
+        assert not views[name].flags.writeable
+
+
+def test_small_mmap_pool_serves_chunked_checkout(tmp_path):
+    store = ArtifactStore(root=str(tmp_path), **CHUNK_KW)
+    store.cas._mmap_pool_max = 1
+    art, w = big_artifact()
+    ref = store.commit_artifact("m", art)
+    np.testing.assert_array_equal(store.materialize_param(ref, "big/w"), w)
+
+
+# ---------------------------------------------------------------------------
+# sync: chunk-granular negotiation, ranged fetch, shard pull
+# ---------------------------------------------------------------------------
+
+def _lineage(tmp_path, name, **kw):
+    root = str(tmp_path / name)
+    store = ArtifactStore(root=root, **kw)
+    return LineageGraph(path=root, store=store), store
+
+
+def test_pull_moves_only_edited_chunks(tmp_path):
+    from repro.remote.sync import pull, push
+    g1, store = _lineage(tmp_path, "src", **CHUNK_KW)
+    art, w = big_artifact()
+    g1.add_node(art, "m")
+    remote = LocalTransport(str(tmp_path / "remote"))
+    push(g1, remote)
+    g2, _ = _lineage(tmp_path, "dst", **CHUNK_KW)
+    pull(g2, remote)
+    baseline = push(g1, remote).objects_transferred
+    assert baseline == 0                       # fully synced
+
+    g1.add_node(ModelArtifact(art.graph, {"big/w": edit(w)}), "m2")
+    g1.add_version_edge("m", "m2")
+    rep = push(g1, remote)
+    e = store.get_manifest(g1.nodes["m2"].artifact_ref)["params"]["big/w"]
+    total_chunks = len(e["chunks"])
+    # only the new manifest + the few changed chunk objects moved
+    assert 0 < rep.objects_transferred < total_chunks
+    rep2 = pull(g2, remote)
+    assert 0 < rep2.objects_transferred < total_chunks
+    got = np.asarray(g2.store.load_artifact(
+        g2.nodes["m2"].artifact_ref).params["big/w"])
+    np.testing.assert_array_equal(
+        got, np.asarray(store.load_artifact(
+            g1.nodes["m2"].artifact_ref).params["big/w"]))
+
+
+def test_fetch_objects_local_transport(tmp_path):
+    g1, store = _lineage(tmp_path, "src", **CHUNK_KW)
+    art, _ = big_artifact()
+    g1.add_node(art, "m")
+    t = LocalTransport(str(store.cas.root))
+    ref = g1.nodes["m"].artifact_ref
+    e = store.get_manifest(ref)["params"]["big/w"]
+    keys = [it["c"] for it in e["chunks"] if "c" in it][:4] + [ref]
+    got = fetch_objects(t, keys)
+    assert set(got) == set(keys)
+    for k in keys:
+        assert got[k] == store.cas.get_bytes(k)
+    assert t.object_sizes(keys) == {k: len(got[k]) for k in keys}
+    assert t.object_sizes(["missing_key"]) == {}
+
+
+def test_fetch_param_shard_local(tmp_path):
+    g1, store = _lineage(tmp_path, "src", chunk_shards=4, **CHUNK_KW)
+    art, w = big_artifact()
+    g1.add_node(art, "m")
+    ref = g1.nodes["m"].artifact_ref
+    t = LocalTransport(str(store.cas.root))
+    raw = w.tobytes()
+    row_bytes = w.shape[1] * 4
+    consumer = ArtifactStore(root=str(tmp_path / "host2"))
+    got = fetch_param_shard(consumer, t, ref, "big/w", 2, 4)
+    rows = w.shape[0]
+    start = (2 * rows) // 4 * row_bytes
+    end = (3 * rows) // 4 * row_bytes
+    assert got == raw[start:end]
+    # the consumer imported strictly fewer chunk objects than exist
+    e = json.loads(consumer.cas.get_bytes(ref))["params"]["big/w"]
+    total_c = sum(1 for it in e["chunks"] if "c" in it)
+    held = sum(1 for it in e["chunks"]
+               if "c" in it and consumer.cas.has(it["c"]))
+    assert 0 < held < total_c
+    with pytest.raises(ValueError):
+        fetch_param_shard(consumer, t, ref, "big/w", 4, 4)
+
+
+def test_shard_grid_respects_mesh_cuts(tmp_path):
+    """No chunk straddles a shard boundary when chunk_shards is set."""
+    store = ArtifactStore(root=str(tmp_path), chunk_shards=4, **CHUNK_KW)
+    art, w = big_artifact()
+    ref = store.commit_artifact("m", art)
+    e = store.get_manifest(ref)["params"]["big/w"]
+    cuts = set(np.cumsum([int(it["n"]) for it in e["chunks"]]).tolist())
+    from repro.dist.sharding import shard_cuts
+    expected = shard_cuts("big/w", w.shape, 4, 4)
+    assert expected and set(expected) <= cuts
+
+
+def test_http_parallel_ranged_read_matches_single_stream(tmp_path):
+    from repro.hub import HubApp, start_in_thread
+    from repro.remote.http import HttpTransport
+    app = HubApp(str(tmp_path / "hub"))
+    payload = np.random.default_rng(0).bytes(3 * 2 ** 20)
+    key = app.store.cas.put_bytes(payload)
+    server, _ = start_in_thread(app)
+    try:
+        t = HttpTransport(server.url, retries=1, backoff=0.01)
+        sizes = t.object_sizes([key, "nope"])
+        assert sizes == {key: len(payload)}
+        whole = t.read_object_range(key, 0, len(payload))
+        par = t.read_object_parallel(key, len(payload),
+                                     part_bytes=256 * 1024, workers=4)
+        assert par == whole == payload
+        # tiny objects short-circuit to one request
+        assert t.read_object_parallel(key, len(payload),
+                                      part_bytes=len(payload) + 1) == payload
+    finally:
+        server.shutdown()
+        server.server_close()
