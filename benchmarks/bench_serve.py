@@ -1,0 +1,141 @@
+"""Serving density + hot-swap latency (DESIGN.md §13).
+
+Builds one base with ``N_DERIVATIVES`` single-layer adapters (the sparse
+finetune regime the paper's pools model), then measures:
+
+* **resident density** — models/GB with the :class:`ModelPool` (one shared
+  base + per-view private deltas) vs naive residency (N independent full
+  copies). Invariant: the pool fits **>= 3x** more models per GB.
+* **hot-swap latency** — endpoint swap on a warm pool (pointer move) vs a
+  naive full checkout of the incoming model. Invariant: swap is faster.
+* **zero-drop** — a predict hammer runs through every swap; any failed
+  in-flight request fails the benchmark.
+
+Run directly (CI serve-smoke job):
+``PYTHONPATH=src:. python -m benchmarks.bench_serve`` — exits non-zero if
+an invariant fails.
+"""
+
+from __future__ import annotations
+
+import tempfile
+import threading
+import time
+from typing import Dict
+
+import numpy as np
+
+from benchmarks.pools import base_model
+from repro.serve import ModelPool, Router
+from repro.store import ArtifactStore
+
+N_DERIVATIVES = 12
+N_SWAPS = 40
+
+
+def _adapter(parent, key: str, seed: int, scale=1e-3):
+    """One-layer perturbation: the maximally-shareable derivative."""
+    rng = np.random.default_rng(seed)
+    v = parent.params[key]
+    return parent.replace_params(
+        {key: (v + rng.normal(scale=scale, size=v.shape)).astype(v.dtype)})
+
+
+def _build_repo(root: str):
+    store = ArtifactStore(root=root)
+    base = base_model(seed=0)
+    base_ref = store.commit_artifact("base", base)
+    keys = [k for k in base.params if k != "head/w"]
+    refs = [store.commit_artifact(
+        f"ft{i}", _adapter(base, keys[i % len(keys)], seed=100 + i),
+        parent_ref=base_ref)
+        for i in range(N_DERIVATIVES)]
+    return store, base, refs
+
+
+def _node_payload(ref: str) -> Dict:
+    return {"nodes": [{"name": "m", "artifact_ref": ref, "parents": [],
+                       "children": [], "version_parents": [],
+                       "version_children": [], "metadata": {}}]}
+
+
+def main() -> Dict:
+    with tempfile.TemporaryDirectory() as root:
+        store, base, refs = _build_repo(root)
+        model_bytes = base.nbytes()
+
+        # -- resident density: pool vs N full copies -----------------------
+        pool = ModelPool(store, max_resident=N_DERIVATIVES + 1)
+        t0 = time.perf_counter()
+        for r in refs:
+            pool.get(r)
+        build_s = time.perf_counter() - t0
+        resident_bytes = pool.base_bytes + pool.private_bytes()
+        naive_bytes = model_bytes * N_DERIVATIVES
+        density_x = naive_bytes / resident_bytes
+
+        # -- naive load cost: one cold full checkout -----------------------
+        store.cache.clear()
+        store.fold_cache.clear()
+        t0 = time.perf_counter()
+        store.materialize_artifact(refs[0])
+        naive_load_s = time.perf_counter() - t0
+
+        # -- hot swap on a warm pool, with an in-flight hammer -------------
+        router = Router(pool, ["prod=node:m"])
+        router.refresh(_node_payload(refs[0]))
+        errors, stop = [], threading.Event()
+
+        def hammer():
+            while not stop.is_set():
+                try:
+                    router.predict("prod")
+                except Exception as exc:  # noqa: BLE001 — a drop = failure
+                    errors.append(exc)
+                    return
+
+        worker = threading.Thread(target=hammer)
+        worker.start()
+        swap_s = []
+        for i in range(N_SWAPS):
+            t0 = time.perf_counter()
+            report = router.refresh(_node_payload(refs[(i + 1) % len(refs)]))
+            swap_s.append(time.perf_counter() - t0)
+            assert report["prod"]["status"] == "swapped"
+        stop.set()
+        worker.join(timeout=10)
+        swap_mean_s = sum(swap_s) / len(swap_s)
+
+        row = {
+            "n_models": N_DERIVATIVES,
+            "model_mb": round(model_bytes / 2**20, 3),
+            "resident_mb": round(resident_bytes / 2**20, 3),
+            "naive_mb": round(naive_bytes / 2**20, 3),
+            "density_x": round(density_x, 2),
+            "models_per_gb_pool": round(N_DERIVATIVES
+                                        / (resident_bytes / 2**30), 1),
+            "models_per_gb_naive": round(N_DERIVATIVES
+                                         / (naive_bytes / 2**30), 1),
+            "build_s": round(build_s, 4),
+            "naive_load_s": round(naive_load_s, 6),
+            "swap_mean_s": round(swap_mean_s, 6),
+            "swap_max_s": round(max(swap_s), 6),
+            "swaps": N_SWAPS,
+            "inflight_errors": len(errors),
+            "params_aliased": pool.stats()["params_aliased"],
+        }
+        print(f"{'metric':<22}{'value':>14}")
+        for k, v in row.items():
+            print(f"{k:<22}{v:>14}")
+
+        assert not errors, f"in-flight requests dropped during swap: {errors[0]}"
+        assert density_x >= 3.0, \
+            f"pool density {density_x:.2f}x < 3x naive residency"
+        assert swap_mean_s < naive_load_s, \
+            f"warm swap {swap_mean_s:.6f}s not faster than naive " \
+            f"load {naive_load_s:.6f}s"
+        return row
+
+
+if __name__ == "__main__":
+    main()

@@ -4,7 +4,8 @@ Prints a ``name,us_per_call,derived`` CSV summary line per benchmark plus
 each benchmark's own table, and writes the machine-readable perf
 trajectory CI and future PRs diff against: ``BENCH_PR4.json`` (commit
 throughput, warm/cold checkout latency, dedup ratio) and
-``BENCH_PR6.json`` (chunk-level dedup, streaming RSS, ranged pull).
+``BENCH_PR6.json`` (chunk-level dedup, streaming RSS, ranged pull) and
+``BENCH_PR7.json`` (serving resident density, hot-swap latency).
 Usage: PYTHONPATH=src python -m benchmarks.run
 """
 
@@ -166,6 +167,38 @@ def main() -> None:
             },
         }, f, indent=1)
     print("wrote BENCH_PR6.json")
+
+    print("=" * 72)
+    print("§13 lineage-native serving — resident density + hot swap")
+    print("=" * 72)
+    from benchmarks import bench_serve
+    serve = bench_serve.main()
+    _csv("serve_density", serve["build_s"] * 1e6 / serve["n_models"],
+         f"density_x={serve['density_x']:.2f},"
+         f"models_per_gb={serve['models_per_gb_pool']}")
+    _csv("serve_swap", serve["swap_mean_s"] * 1e6,
+         f"naive_load_us={serve['naive_load_s']*1e6:.1f},"
+         f"inflight_errors={serve['inflight_errors']}")
+    with open("BENCH_PR7.json", "w") as f:
+        json.dump({
+            "resident_density": {
+                "n_models": serve["n_models"],
+                "model_mb": serve["model_mb"],
+                "resident_mb": serve["resident_mb"],
+                "naive_mb": serve["naive_mb"],
+                "density_x": serve["density_x"],
+                "models_per_gb_pool": serve["models_per_gb_pool"],
+                "models_per_gb_naive": serve["models_per_gb_naive"],
+            },
+            "hot_swap": {
+                "swaps": serve["swaps"],
+                "swap_mean_s": serve["swap_mean_s"],
+                "swap_max_s": serve["swap_max_s"],
+                "naive_load_s": serve["naive_load_s"],
+                "inflight_errors": serve["inflight_errors"],
+            },
+        }, f, indent=1)
+    print("wrote BENCH_PR7.json")
 
     print("=" * 72)
     print("Storage kernels — CPU wall-time + TPU roofline bound")

@@ -59,6 +59,19 @@ reserved for the inference engine in repro/serve):
                                 journalled transfers
     hub stats <url>             live counters of a running hub daemon
 
+Serving commands (DESIGN.md §13; the inference tier over -C repo's store):
+    serve <name>=<mode>:<target> [...] [--hub URL] [--host H] [--port N]
+                                lineage-native model serving: one resident
+                                chain base, per-endpoint derivative views
+                                by fused delta application, hot-swapped on
+                                lineage publish (local lineage.json etag,
+                                or a hub's ETag'd GET /api/lineage with
+                                --hub). Endpoint specs pin a branch
+                                (prod=branch:main — head re-resolves, a
+                                merge INTO the branch promotes), a node
+                                (canary=node:m@v2), or a raw manifest ref.
+                                Quarantined nodes never get traffic.
+
 Diagnostics commands (paper §4; DESIGN.md §9):
     diag run [node] [--pattern P] [--match-glob] [--jobs N] [--force]
              [--builtin]        memoized parallel test sweep: unchanged
@@ -216,6 +229,32 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--allow-quarantined", action="store_true",
                    help="accept pushed nodes flagged quarantined instead of "
                         "rejecting them server-side")
+    p = sub.add_parser("serve",
+                       help="lineage-native inference daemon (DESIGN.md "
+                            "§13): one resident base, hot-swappable "
+                            "branch-pinned endpoints")
+    p.add_argument("endpoints", nargs="+", metavar="NAME=MODE:TARGET",
+                   help="endpoint specs, e.g. prod=branch:main "
+                        "canary=node:m@v2 pin=ref:m_<hash>")
+    p.add_argument("--hub", default=None, metavar="URL",
+                   help="watch this hub's ETag'd lineage instead of the "
+                        "local lineage.json (store still reads -C repo)")
+    p.add_argument("--token", default=None,
+                   help="bearer token for --hub (also $MGIT_HUB_TOKEN)")
+    p.add_argument("--host", default="127.0.0.1",
+                   help="bind address for the serving daemon")
+    p.add_argument("--port", type=int, default=8944,
+                   help="bind port (0 picks an ephemeral one)")
+    p.add_argument("--poll", type=float, default=1.0, metavar="S",
+                   help="lineage watch interval in seconds")
+    p.add_argument("--max-resident", type=int, default=8, metavar="N",
+                   help="LRU cap on resident derivative views")
+    p.add_argument("--budget-mb", type=int, default=None, metavar="MB",
+                   help="byte budget over the views' private (non-aliased) "
+                        "bytes; the pinned base is not counted")
+    p.add_argument("--backend", default=None,
+                   help="kernel backend for delta application (default: "
+                        "host fold on CPU, fused chain_apply on device)")
     return ap
 
 
@@ -231,6 +270,8 @@ def main(argv=None) -> int:
 
     if args.cmd == "hub":
         return _cmd_hub(args)
+    if args.cmd == "serve":
+        return _cmd_serve(args)
     if args.cmd == "clone":  # dest is the repo; don't touch args.repo
         from repro import remote as rm
         report = rm.clone(args.url, args.dest, filter=args.filter)
@@ -424,6 +465,41 @@ def _cmd_hub(args) -> int:
     from repro.remote.http import HttpTransport
     print(json.dumps(HttpTransport(args.url, token=args.token).server_stats(),
                      indent=1))
+    return 0
+
+
+def _cmd_serve(args) -> int:
+    """`serve`: blocking inference daemon over the -C repo's store."""
+    from repro.serve import (HubLineageSource, LineageWatcher,
+                             LocalLineageSource, ModelPool, Router, ServeApp,
+                             make_server)
+    store = ArtifactStore(root=args.repo)
+    pool = ModelPool(store, max_resident=args.max_resident,
+                     budget_bytes=(args.budget_mb * (1 << 20)
+                                   if args.budget_mb else None),
+                     backend=args.backend)
+    router = Router(pool, args.endpoints)
+    token = args.token or os.environ.get("MGIT_HUB_TOKEN")
+    source = (HubLineageSource(args.hub, token=token) if args.hub
+              else LocalLineageSource(args.repo))
+    watcher = LineageWatcher(source, router, interval_s=args.poll)
+    watcher.poll()  # resolve every endpoint before accepting traffic
+    app = ServeApp(router, pool, watcher)
+    server = make_server(app, host=args.host, port=args.port)
+    watcher.start()
+    print(f"mgit serve: {len(router.endpoints)} endpoint(s) over "
+          f"{source.describe()} at {server.url}", flush=True)
+    for ep in router.endpoints.values():
+        st = ep.stats()
+        print(f"  {st['name']} -> {st['spec']} "
+              f"(node={st['node']}, gate={st['gate']})", flush=True)
+    try:
+        server.serve_forever()
+    except KeyboardInterrupt:
+        pass
+    finally:
+        watcher.stop()
+        server.server_close()
     return 0
 
 

@@ -9,6 +9,8 @@ from repro.core.lineage import (CreationFunction, LineageGraph, LineageNode,
                                 RegisteredTest, register_creation_type)
 from repro.core.merge import (CONFLICT, NO_CONFLICT, POSSIBLE_CONFLICT,
                               MergeResult, merge, merge_artifacts)
+from repro.core.quarantine import (QUARANTINE_FLAG, QUARANTINE_RECORD,
+                                   is_quarantined)
 from repro.core.traversal import (all_parents_first, bfs, bisect, dfs,
                                   version_chain)
 
@@ -22,5 +24,6 @@ __all__ = [
     "register_creation_type",
     "CONFLICT", "NO_CONFLICT", "POSSIBLE_CONFLICT", "MergeResult", "merge",
     "merge_artifacts",
+    "QUARANTINE_FLAG", "QUARANTINE_RECORD", "is_quarantined",
     "all_parents_first", "bfs", "bisect", "dfs", "version_chain",
 ]

@@ -1,0 +1,27 @@
+"""The quarantine flag — one reader for every enforcement seam.
+
+A node a test gate failed carries ``metadata["quarantined"] = True`` plus a
+``metadata["quarantine"]`` record (DESIGN.md §9.4). Three subsystems make
+policy off that flag: push selection (``repro.remote.sync`` excludes
+quarantined nodes from the shipped subgraph), the hub's publish filter
+(``repro.hub.app`` refuses to introduce them), and the serving gate
+(``repro.serve.router`` refuses them traffic). Each used to read the
+metadata ad hoc through ``repro.diag.gate``, which drags in the whole
+diagnostics runner; this module is the dependency-light home both the flag
+names and the predicate live in. ``repro.diag.gate`` re-exports everything
+here, so existing imports keep working.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Union
+
+QUARANTINE_FLAG = "quarantined"
+QUARANTINE_RECORD = "quarantine"
+
+
+def is_quarantined(node: Union["LineageNode", Dict[str, Any]]) -> bool:
+    """Works on live nodes AND serialized node documents (sync payloads)."""
+    metadata = node.get("metadata", {}) if isinstance(node, dict) \
+        else node.metadata
+    return bool(metadata.get(QUARANTINE_FLAG))

@@ -28,10 +28,12 @@ import dataclasses
 from typing import Any, Dict, List, Optional, Union
 
 from repro.core.lineage import LineageGraph, LineageNode, RegisteredTest
+# Flag names + predicate live in the dependency-light core module so the
+# push/hub/serving seams can read them without importing the diag runner;
+# re-exported here for compatibility with existing imports.
+from repro.core.quarantine import (QUARANTINE_FLAG, QUARANTINE_RECORD,
+                                   is_quarantined)
 from repro.diag.runner import DiagnosticsRunner, TestResult
-
-QUARANTINE_FLAG = "quarantined"
-QUARANTINE_RECORD = "quarantine"
 
 
 @dataclasses.dataclass
@@ -168,13 +170,6 @@ def release_node(graph: LineageGraph, name: str) -> None:
     node.metadata.pop(QUARANTINE_FLAG, None)
     node.metadata.pop(QUARANTINE_RECORD, None)
     graph._commit()
-
-
-def is_quarantined(node: Union[LineageNode, Dict[str, Any]]) -> bool:
-    """Works on live nodes AND serialized node documents (sync payloads)."""
-    metadata = node.metadata if isinstance(node, LineageNode) \
-        else node.get("metadata", {})
-    return bool(metadata.get(QUARANTINE_FLAG))
 
 
 def gate_report(graph: LineageGraph) -> List[Dict[str, Any]]:

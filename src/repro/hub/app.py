@@ -101,7 +101,7 @@ class HubApp:
         that is new or modified is replaced by the hub's copy or dropped.
         Adjacency lists are pruned to the surviving node set afterwards so
         a drop never leaves dangling edges."""
-        from repro.diag.gate import is_quarantined  # late: diag pulls extras
+        from repro.core.quarantine import is_quarantined
         cur = {n["name"]: n for n in (current or {}).get("nodes", [])}
         kept: List[Dict] = []
         rejected: List[str] = []

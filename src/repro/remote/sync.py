@@ -488,7 +488,7 @@ def push(graph: LineageGraph, transport: Transport,
     selected = _select_nodes(ours_payload, filter)
     quarantined_skipped: List[str] = []
     if not include_quarantined:
-        from repro.diag.gate import is_quarantined
+        from repro.core.quarantine import is_quarantined
         quarantined_skipped = [n["name"] for n in selected
                                if is_quarantined(n)]
         selected = [n for n in selected if not is_quarantined(n)]

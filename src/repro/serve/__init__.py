@@ -1,3 +1,32 @@
-from repro.serve.engine import ServeEngine, make_prefill_step, make_serve_step
+"""Lineage-native serving (DESIGN.md §13).
 
-__all__ = ["ServeEngine", "make_prefill_step", "make_serve_step"]
+``repro.serve`` turns the repo into an inference tier: a
+:class:`~repro.serve.pool.ModelPool` keeps one chain base resident and
+derives N hot-swappable views by delta application (the serving analogue
+of the storage dedup), a :class:`~repro.serve.router.Router` maps named
+endpoints to *branch heads* with the quarantine flag as a serving gate,
+a :class:`~repro.serve.watch.LineageWatcher` hot-swaps endpoints on
+lineage publishes (local etag or the hub's ETag'd ``GET /api/lineage``),
+and :mod:`repro.serve.routes` exposes it all over HTTP (``cli serve``).
+:class:`~repro.serve.engine.ServeEngine` remains the batched transformer
+prefill/decode engine for config-bearing model families.
+"""
+
+from repro.serve.engine import (ServeEngine, batch_lengths, left_align,
+                                make_prefill_step, make_serve_step)
+from repro.serve.pool import BitIdentityError, ModelPool, ResidentView
+from repro.serve.router import (Endpoint, EndpointUnavailable, Router,
+                                parse_endpoint_spec, resolve_branch_head)
+from repro.serve.routes import ServeApp, make_server, start_in_thread
+from repro.serve.watch import (HubLineageSource, LineageWatcher,
+                               LocalLineageSource)
+
+__all__ = [
+    "ServeEngine", "batch_lengths", "left_align",
+    "make_prefill_step", "make_serve_step",
+    "BitIdentityError", "ModelPool", "ResidentView",
+    "Endpoint", "EndpointUnavailable", "Router",
+    "parse_endpoint_spec", "resolve_branch_head",
+    "ServeApp", "make_server", "start_in_thread",
+    "HubLineageSource", "LineageWatcher", "LocalLineageSource",
+]

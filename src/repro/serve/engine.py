@@ -28,8 +28,51 @@ def make_serve_step(cfg: ModelConfig):
     return serve_step
 
 
+def batch_lengths(batch: Dict[str, jnp.ndarray]) -> Optional[jnp.ndarray]:
+    """Per-sequence prompt lengths from ``lengths`` (B,) or ``mask`` (B, S).
+
+    Returns ``None`` when neither is present (the batch is declared
+    unpadded). Lengths are clamped to [1, S]: an empty prompt still
+    occupies one slot so the decode recursion has a defined position."""
+    if "lengths" in batch:
+        lengths = jnp.asarray(batch["lengths"], jnp.int32)
+    elif "mask" in batch:
+        lengths = jnp.sum(batch["mask"] > 0, axis=-1).astype(jnp.int32)
+    else:
+        return None
+    return jnp.clip(lengths, 1, batch["tokens"].shape[1])
+
+
+def left_align(tokens: jnp.ndarray, lengths: jnp.ndarray,
+               pad_id: int = 0) -> jnp.ndarray:
+    """Shift each row right so its last real token sits in the last column.
+
+    The decode cache is positional: prefill writes prompt K/V at physical
+    slots ``[0, S)`` and the next token lands at slot ``S`` for the whole
+    batch. Right-padded ragged rows break that — their true last token is
+    at ``lengths[i] - 1``, so last-column logits belong to padding. Left-
+    aligning restores one shared layout: every row ends at column
+    ``S - 1``, and the shared position counter is uniformly correct."""
+    B, S = tokens.shape
+    src = jnp.arange(S)[None, :] - (S - lengths)[:, None]
+    gathered = jnp.take_along_axis(tokens, jnp.clip(src, 0, S - 1), axis=1)
+    return jnp.where(src >= 0, gathered, pad_id)
+
+
 class ServeEngine:
-    """Minimal batched engine: prefill once, then greedy decode N tokens."""
+    """Minimal batched engine: prefill once, then greedy decode N tokens.
+
+    Ragged batches are declared via ``batch["lengths"]`` (B,) or a 0/1
+    ``batch["mask"]`` (B, S) and are normalized by **left-alignment**
+    (the standard decoder-only padding side): per-sequence last-token
+    logits become the physical last column and one shared decode position
+    serves the whole batch. Contract: a row of length L generated inside a
+    ragged width-S batch is identical to generating that row alone at the
+    same width — and a full-width row is identical to the unpadded run.
+    (Left pads are attended like any prefix token — the model stack has no
+    padding mask — so left-padded rows approximate, rather than replicate,
+    their unpadded runs; positions index physical cache slots.)
+    """
 
     def __init__(self, cfg: ModelConfig, params, max_len: int):
         self.cfg = cfg
@@ -39,9 +82,23 @@ class ServeEngine:
         self._step = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
 
     def generate(self, batch: Dict[str, jnp.ndarray], n_tokens: int):
+        """Greedy-decode ``n_tokens`` tokens; returns (B, n_tokens) int32.
+
+        ``n_tokens=0`` returns an empty (B, 0) array without touching the
+        model; ``n_tokens=1`` is exactly one prefill and no decode steps."""
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        if n_tokens <= 0:
+            return jnp.zeros((B, 0), jnp.int32)
+        lengths = batch_lengths(batch)
+        if lengths is not None:
+            batch = {k: v for k, v in batch.items() if k != "mask"}
+            batch["tokens"] = left_align(tokens, lengths)
         last_logits, cache = self._prefill(self.params, batch)
         token = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)[:, None]
-        pos = jnp.asarray(batch["tokens"].shape[1], jnp.int32)
+        # every row's prompt now ends at physical slot S - 1, so the first
+        # decoded token lands at slot S for the whole batch
+        pos = jnp.asarray(S, jnp.int32)
         out = [token]
         for _ in range(n_tokens - 1):
             token, _, cache = self._step(self.params, cache, token, pos)

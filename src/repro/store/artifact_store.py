@@ -932,6 +932,14 @@ class ArtifactStore:
         return bytes(out)
 
     # -- manifests ----------------------------------------------------------------
+    def reload(self) -> None:
+        """Pick up commits made by OTHER processes since this store opened.
+
+        Delegates to :meth:`CAS.reload` (re-index packs, tail-scan new
+        appends). Tensor/fold/manifest caches are content-addressed, so
+        nothing cached can go stale — new refs simply read through."""
+        self.cas.reload()
+
     def get_manifest(self, ref: str) -> Dict[str, Any]:
         with self._lock:
             cached = self._manifests.get(ref)
@@ -997,6 +1005,23 @@ class ArtifactStore:
                 return ReconstructionPlan("chunked", (cur_ref, cur_key),
                                           tuple(reversed(hops)))
             hops.append(self._hop_of(e, cur_ref, cur_key))
+
+    def chain_recipe(self, ref: str, key: str
+                     ) -> Tuple[str, str, Dict[str, Any], List[DeltaHop]]:
+        """Structural chain walk for out-of-store executors (the serving
+        pool's derivative-view materialization, DESIGN.md §13).
+
+        Returns ``(terminal_ref, terminal_key, terminal_entry, hops)``:
+        the chain base entry (``full`` or ``chunked``) plus every delta hop
+        in base->tip order. Unlike :meth:`resolve_chain` this never
+        consults the tensor cache — the caller owns its own residency
+        story and needs the full structural recipe, not a cache shortcut."""
+        hops: List[DeltaHop] = []
+        for cur_ref, cur_key, e in self._walk_entries(ref, key):
+            if e["kind"] != "delta":
+                return cur_ref, cur_key, e, list(reversed(hops))
+            hops.append(self._hop_of(e, cur_ref, cur_key))
+        raise RuntimeError(f"chain of {ref!r}:{key!r} has no base entry")
 
     @staticmethod
     def _hop_of(e: Dict[str, Any], ref: str, key: str) -> DeltaHop:

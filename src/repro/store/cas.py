@@ -177,7 +177,7 @@ class CAS:
         return os.path.join(self.root, "packs", "pack-index.json")
 
     # -- pack index persistence / recovery --------------------------------------
-    def _load_pack_index(self) -> None:
+    def _load_pack_index(self, truncate_torn: bool = True) -> None:
         if os.path.exists(self._index_path()):
             with open(self._index_path()) as f:
                 payload = json.load(f)
@@ -202,10 +202,12 @@ class CAS:
             actual = os.path.getsize(path)
             indexed = self._pack_sizes.get(pid, 0)
             if actual > indexed:
-                self._scan_pack_tail(pid, indexed, actual)
+                self._scan_pack_tail(pid, indexed, actual,
+                                     truncate_torn=truncate_torn)
         self._sweep_orphan_packs()
 
-    def _scan_pack_tail(self, pack_id: int, start: int, end: int) -> None:
+    def _scan_pack_tail(self, pack_id: int, start: int, end: int,
+                        truncate_torn: bool = True) -> None:
         with open(self._pack_path(pack_id), "rb") as f:
             f.seek(start)
             pos = start
@@ -233,9 +235,10 @@ class CAS:
                 self._pack_index[key] = (pack_id, data_off, dlen)
                 pos = data_off + dlen
             self._pack_sizes[pack_id] = pos
-        if pos < end:
+        if pos < end and truncate_torn:
             # torn record from a crash mid-append — drop it so later appends
-            # land exactly at the indexed offset
+            # land exactly at the indexed offset (a read-only reload instead
+            # leaves it alone: the writer may still be mid-append)
             with open(self._pack_path(pack_id), "r+b") as f:
                 f.truncate(pos)
 
@@ -692,6 +695,26 @@ class CAS:
         with self._lock:
             self._persist_refcounts()
             self._persist_pack_index()
+
+    def reload(self) -> None:
+        """Pick up objects appended by OTHER processes since open.
+
+        Long-running readers (the serve daemon watching for publishes) see
+        a snapshot of the pack index from open time; a writer process that
+        commits afterwards appends records this instance has never indexed.
+        Re-reading refcounts + the persisted index and tail-scanning the
+        packs — exactly the open-time recovery pass — makes them visible.
+        Read-only: torn tail records (a writer mid-append) are skipped,
+        never truncated, and pooled mmaps remap on demand as packs grow."""
+        if self.root is None:
+            return
+        with self._lock:
+            rc = os.path.join(self.root, "refcounts.json")
+            if os.path.exists(rc):
+                with open(rc) as f:
+                    self.refcounts = json.load(f)
+            self._load_pack_index(truncate_torn=False)
+            self._rebuild_counters()
 
     # -- integrity ----------------------------------------------------------------
     def keys(self) -> List[str]:

@@ -32,6 +32,15 @@ def finetune_like(parent: ModelArtifact, seed=1, scale=5e-5,
                            (rng.random(v.shape) < density)).astype(v.dtype)))
 
 
+def perturb(parent: ModelArtifact, key: str, seed=1,
+            scale=1e-3) -> ModelArtifact:
+    """Single-tensor perturbation — maximal param sharing with the parent."""
+    rng = np.random.default_rng(seed)
+    v = parent.params[key]
+    return parent.replace_params(
+        {key: (v + rng.normal(scale=scale, size=v.shape)).astype(v.dtype)})
+
+
 def reinit_head(parent: ModelArtifact, seed=2) -> ModelArtifact:
     rng = np.random.default_rng(seed)
     new_head = rng.normal(size=parent.params["head/w"].shape).astype(np.float32)

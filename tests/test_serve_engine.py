@@ -1,0 +1,104 @@
+"""ServeEngine ragged batches: left-alignment, positions, n_tokens edges."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import get_config, init_params
+from repro.serve import ServeEngine, batch_lengths, left_align
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = dataclasses.replace(get_config("qwen3-0.6b").reduced(),
+                              remat="none")
+    return ServeEngine(cfg, init_params(cfg, 0), max_len=16)
+
+
+def _toks(rows):
+    return jnp.asarray(np.array(rows, np.int32))
+
+
+# ---------------------------------------------------------------------------
+# alignment helpers
+# ---------------------------------------------------------------------------
+
+def test_left_align_shifts_rows_right():
+    t = _toks([[1, 2, 3, 4], [5, 6, 7, 8]])
+    out = left_align(t, jnp.asarray([4, 2], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(out),
+                                  [[1, 2, 3, 4], [0, 0, 5, 6]])
+
+
+def test_left_align_custom_pad_id():
+    out = left_align(_toks([[9, 9, 0]]), jnp.asarray([1], jnp.int32),
+                     pad_id=7)
+    np.testing.assert_array_equal(np.asarray(out), [[7, 7, 9]])
+
+
+def test_batch_lengths_sources_and_clamp():
+    batch = {"tokens": _toks([[1, 2, 3], [4, 5, 6]])}
+    assert batch_lengths(batch) is None  # no lengths/mask: unpadded
+    np.testing.assert_array_equal(
+        np.asarray(batch_lengths(
+            {**batch, "mask": jnp.asarray([[1, 1, 1], [1, 0, 0]])})),
+        [3, 1])
+    # explicit lengths win over the mask; zero clamps to one slot
+    np.testing.assert_array_equal(
+        np.asarray(batch_lengths(
+            {**batch, "mask": jnp.ones((2, 3)),
+             "lengths": jnp.asarray([2, 0])})),
+        [2, 1])
+
+
+# ---------------------------------------------------------------------------
+# generate: n_tokens edges
+# ---------------------------------------------------------------------------
+
+def test_generate_zero_and_one_tokens(engine):
+    batch = {"tokens": _toks([[3, 1, 4, 1, 5], [9, 2, 6, 5, 3]])}
+    out0 = engine.generate(batch, 0)
+    assert out0.shape == (2, 0) and out0.dtype == jnp.int32
+    out1 = engine.generate(batch, 1)  # exactly one prefill, no decode
+    assert out1.shape == (2, 1)
+    out3 = engine.generate(batch, 3)
+    assert out3.shape == (2, 3)
+    # greedy decode is deterministic: shorter runs are prefixes
+    np.testing.assert_array_equal(np.asarray(out3[:, :1]), np.asarray(out1))
+
+
+# ---------------------------------------------------------------------------
+# generate: ragged-batch contract
+# ---------------------------------------------------------------------------
+
+def test_full_width_row_matches_unpadded_run(engine):
+    row = [3, 1, 4, 1, 5, 9]
+    ragged = {"tokens": _toks([row, [2, 7, 0, 0, 0, 0]]),
+              "lengths": jnp.asarray([6, 2], jnp.int32)}
+    got = engine.generate(ragged, 4)
+    solo = engine.generate({"tokens": _toks([row])}, 4)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(solo[0]))
+
+
+def test_ragged_batch_matches_single_row_runs(engine):
+    rows = [[3, 1, 4, 1, 5, 9], [2, 7, 1, 0, 0, 0], [8, 0, 0, 0, 0, 0]]
+    lens = [6, 3, 1]
+    got = engine.generate({"tokens": _toks(rows),
+                           "lengths": jnp.asarray(lens, jnp.int32)}, 4)
+    for i, (row, n) in enumerate(zip(rows, lens)):
+        solo = engine.generate({"tokens": _toks([row]),
+                                "lengths": jnp.asarray([n], jnp.int32)}, 4)
+        np.testing.assert_array_equal(np.asarray(got[i]),
+                                      np.asarray(solo[0]), err_msg=f"row {i}")
+
+
+def test_mask_and_lengths_agree(engine):
+    rows = [[5, 6, 7, 8], [1, 2, 0, 0]]
+    a = engine.generate({"tokens": _toks(rows),
+                         "lengths": jnp.asarray([4, 2], jnp.int32)}, 3)
+    b = engine.generate({"tokens": _toks(rows),
+                         "mask": jnp.asarray([[1, 1, 1, 1], [1, 1, 0, 0]])},
+                        3)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,319 @@
+"""Router + watcher + HTTP surface (DESIGN.md §13.2–§13.4): endpoint specs,
+branch-head resolution, quarantine gate, zero-drop hot swap, lineage watch."""
+
+import json
+import threading
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.core import LineageGraph
+from repro.serve import (EndpointUnavailable, LineageWatcher,
+                         LocalLineageSource, ModelPool, Router, ServeApp,
+                         parse_endpoint_spec, resolve_branch_head,
+                         start_in_thread)
+from repro.store import ArtifactStore
+
+from helpers import make_chain_model, perturb
+
+
+@pytest.fixture
+def repo(tmp_path):
+    """base@v1 with two branch derivatives sharing it as common ancestor."""
+    store = ArtifactStore(root=str(tmp_path))
+    g = LineageGraph(path=str(tmp_path), store=store)
+    base = make_chain_model(seed=0)
+    g.add_node(base, "base@v1")
+    for name, key, seed in (("main", "L0/w", 11), ("ab-test", "L3/w", 12)):
+        g.add_edge("base@v1", name)
+        g.add_node(perturb(base, key, seed=seed), name)
+    return str(tmp_path), store, g, base
+
+
+# ---------------------------------------------------------------------------
+# endpoint specs
+# ---------------------------------------------------------------------------
+
+def test_parse_endpoint_spec_forms():
+    assert parse_endpoint_spec("prod=branch:main") == {
+        "name": "prod", "mode": "branch", "target": "main"}
+    assert parse_endpoint_spec("prod=main")["mode"] == "branch"  # bare
+    assert parse_endpoint_spec("pin=node:x@v2")["target"] == "x@v2"
+    assert parse_endpoint_spec("raw=ref:m_abc")["mode"] == "ref"
+
+
+@pytest.mark.parametrize("bad", ["noeq", "a=", "=branch:x", "a=weird:x"])
+def test_parse_endpoint_spec_rejects(bad):
+    with pytest.raises(ValueError):
+        parse_endpoint_spec(bad)
+
+
+def test_router_rejects_duplicate_endpoints(repo):
+    _, store, g, base = repo
+    with pytest.raises(ValueError, match="duplicate"):
+        Router(ModelPool(store), ["p=branch:main", "p=branch:ab-test"])
+
+
+# ---------------------------------------------------------------------------
+# branch-head resolution
+# ---------------------------------------------------------------------------
+
+def _n(name, children=(), parents=(), vc=(), vp=()):
+    return {"name": name, "children": list(children),
+            "parents": list(parents), "version_children": list(vc),
+            "version_parents": list(vp)}
+
+
+def _nodes(*docs):
+    return {d["name"]: d for d in docs}
+
+
+def test_branch_head_walks_version_chain():
+    nodes = _nodes(_n("m", vc=["m@v2"]),
+                   _n("m@v2", vp=["m"], vc=["m@v3"]),
+                   _n("m@v3", vp=["m@v2"]))
+    assert resolve_branch_head(nodes, "m") == "m@v3"
+
+
+def test_branch_head_ignores_derivations():
+    # deriving FROM a branch (1-parent child) does not advance it
+    nodes = _nodes(_n("m", children=["ft"]), _n("ft", parents=["m"]))
+    assert resolve_branch_head(nodes, "m") == "m"
+
+
+def test_branch_head_follows_joins():
+    # merging INTO a branch does advance it: promote = merge
+    nodes = _nodes(_n("m", children=["ft", "merge(m,o)"]),
+                   _n("o", children=["merge(m,o)"]),
+                   _n("ft", parents=["m"]),
+                   _n("merge(m,o)", parents=["m", "o"]))
+    assert resolve_branch_head(nodes, "m") == "merge(m,o)"
+    assert resolve_branch_head(nodes, "o") == "merge(m,o)"
+
+
+def test_branch_head_missing_root_and_cycles():
+    with pytest.raises(KeyError):
+        resolve_branch_head({}, "m")
+    nodes = _nodes(_n("a", vc=["b"]), _n("b", vc=["a"]))
+    assert resolve_branch_head(nodes, "a") == "b"  # terminates
+
+
+# ---------------------------------------------------------------------------
+# lineage-driven routing: branches, merges, quarantine
+# ---------------------------------------------------------------------------
+
+def test_router_branch_endpoints_and_merge_promotion(repo):
+    _, store, g, base = repo
+    router = Router(ModelPool(store),
+                    ["prod=branch:main", "canary=branch:ab-test"])
+    report = router.refresh(g.to_payload())
+    assert report["prod"]["status"] == "swapped"
+    assert report["canary"]["status"] == "swapped"
+    a, b = router.predict("prod"), router.predict("canary")
+    assert a["ref"] != b["ref"]
+    assert a["y"] != b["y"]
+
+    # deriving an experiment FROM main must not advance prod
+    g.add_edge("main", "experiment")
+    g.add_node(perturb(base, "L2/w", seed=5), "experiment")
+    assert router.refresh(g.to_payload())["prod"]["status"] == "unchanged"
+
+    # promote = merge: both branch heads land on the merge node
+    g.merge("main", "ab-test")
+    r3 = router.refresh(g.to_payload())
+    assert r3["prod"]["status"] == "swapped"
+    assert r3["prod"]["node"] == "merge(main,ab-test)"
+    assert r3["canary"]["node"] == "merge(main,ab-test)"
+    assert (router.predict("prod")["ref"]
+            == router.predict("canary")["ref"])
+
+
+def test_quarantine_gates_traffic(repo):
+    _, store, g, base = repo
+    pool = ModelPool(store)
+    router = Router(pool, ["prod=branch:main"])
+    router.refresh(g.to_payload())
+    good = router.predict("prod")
+
+    g.nodes["main"].metadata["quarantined"] = True
+    g.save()
+    report = router.refresh(g.to_payload())
+    assert report["prod"]["status"] == "gate_blocked"
+    assert router.endpoints["prod"].stats()["gate"]
+    # the last healthy view keeps serving...
+    assert router.predict("prod")["ref"] == good["ref"]
+
+    # ...but an endpoint with no healthy view ever refuses outright
+    r2 = Router(pool, ["p2=branch:main"])
+    assert r2.refresh(g.to_payload())["p2"]["status"] == "gate_blocked"
+    with pytest.raises(EndpointUnavailable, match="quarantined"):
+        r2.predict("p2")
+
+    # release: traffic resumes
+    g.nodes["main"].metadata["quarantined"] = False
+    g.save()
+    assert r2.refresh(g.to_payload())["p2"]["status"] == "swapped"
+    assert r2.predict("p2")["ref"] == good["ref"]
+
+
+def test_refresh_failure_isolated_per_endpoint(repo):
+    _, store, g, base = repo
+    router = Router(ModelPool(store),
+                    ["prod=branch:main", "ghost=branch:nope"])
+    report = router.refresh(g.to_payload())
+    assert report["prod"]["status"] == "swapped"
+    assert report["ghost"]["status"] == "error"
+    router.predict("prod")
+    with pytest.raises(EndpointUnavailable):
+        router.predict("ghost")
+
+
+# ---------------------------------------------------------------------------
+# zero-drop hot swap
+# ---------------------------------------------------------------------------
+
+def _publish_v2(g, base):
+    g.add_node(perturb(base, "L1/w", seed=77), "main@v2")
+    g.add_version_edge("main", "main@v2")
+
+
+def test_swap_is_zero_drop_under_lease(repo):
+    _, store, g, base = repo
+    router = Router(ModelPool(store), ["prod=branch:main"])
+    router.refresh(g.to_payload())
+    ep = router.endpoints["prod"]
+    with ep.lease() as view:
+        before = view.probe()
+        _publish_v2(g, base)  # a publish lands mid-request
+        assert router.refresh(g.to_payload())["prod"]["status"] == "swapped"
+        # the endpoint moved on; the leased view is untouched and draining
+        assert ep.current_ref != view.ref
+        assert ep.stats()["draining"] == 1
+        np.testing.assert_array_equal(view.probe(), before)
+    # lease released -> drained view reaped
+    assert ep.stats()["draining"] == 0
+    assert router.predict("prod")["node"] == "main@v2"
+
+
+def test_concurrent_predicts_survive_swaps(repo):
+    _, store, g, base = repo
+    router = Router(ModelPool(store), ["prod=branch:main"])
+    p1 = g.to_payload()
+    _publish_v2(g, base)
+    p2 = g.to_payload()
+    router.refresh(p1)
+    errors, stop = [], threading.Event()
+
+    def hammer():
+        while not stop.is_set():
+            try:
+                router.predict("prod")
+            except Exception as exc:  # noqa: BLE001 — any drop is a failure
+                errors.append(exc)
+                return
+
+    threads = [threading.Thread(target=hammer) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for payload in (p2, p1, p2, p1, p2):
+        router.refresh(payload)
+    stop.set()
+    for t in threads:
+        t.join(timeout=10)
+    assert not errors
+    assert router.endpoints["prod"].swaps >= 6  # initial + 5 flips
+
+
+# ---------------------------------------------------------------------------
+# lineage watcher
+# ---------------------------------------------------------------------------
+
+def test_local_watcher_detects_publish(repo):
+    root, store, g, base = repo
+    router = Router(ModelPool(store), ["prod=branch:main"])
+    watcher = LineageWatcher(LocalLineageSource(root), router,
+                             interval_s=0.01)
+    r1 = watcher.poll()
+    assert r1["changed"] and r1["endpoints"]["prod"]["status"] == "swapped"
+    assert watcher.poll()["changed"] is False  # same etag: no re-resolve
+    _publish_v2(g, base)
+    r3 = watcher.poll()
+    assert r3["changed"]
+    assert r3["endpoints"]["prod"]["node"] == "main@v2"
+    assert watcher.stats()["changes"] == 2
+
+
+# ---------------------------------------------------------------------------
+# HTTP surface
+# ---------------------------------------------------------------------------
+
+def _get(url):
+    with urllib.request.urlopen(url, timeout=10) as r:
+        return json.loads(r.read())
+
+
+def _post(url, obj):
+    req = urllib.request.Request(
+        url, data=json.dumps(obj).encode(), method="POST",
+        headers={"Content-Type": "application/json"})
+    with urllib.request.urlopen(req, timeout=10) as r:
+        return json.loads(r.read())
+
+
+def test_http_serving_surface(repo):
+    root, store, g, base = repo
+    router = Router(ModelPool(store),
+                    ["prod=branch:main", "canary=branch:ab-test"])
+    watcher = LineageWatcher(LocalLineageSource(root), router, interval_s=30)
+    watcher.poll()
+    server, _ = start_in_thread(ServeApp(router, router.pool, watcher))
+    try:
+        ping = _get(server.url + "/api/ping")
+        assert ping["ok"] and ping["endpoints"] == ["canary", "prod"]
+        eps = _get(server.url + "/api/endpoints")["endpoints"]
+        assert {e["name"] for e in eps} == {"canary", "prod"}
+        pa = _post(server.url + "/api/predict/prod", {})
+        pb = _post(server.url + "/api/predict/canary",
+                   {"x": [[1.0] * 16]})
+        assert pa["ref"] != pb["ref"]
+
+        # merge canary into main, then force one poll over HTTP
+        g.merge("main", "ab-test")
+        assert _post(server.url + "/api/refresh", {})["changed"]
+        pa2 = _post(server.url + "/api/predict/prod", {})
+        assert pa2["node"] == "merge(main,ab-test)"
+
+        stats = _get(server.url + "/api/stats")
+        assert stats["predictions"] == 3
+        assert stats["pool"]["base_ref"]
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _post(server.url + "/api/predict/nope", {})
+        assert ei.value.code == 400
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _get(server.url + "/api/nothing")
+        assert ei.value.code == 404
+    finally:
+        server.shutdown()
+        server.server_close()
+
+
+def test_http_gate_refusal_is_503(repo):
+    root, store, g, base = repo
+    g.nodes["main"].metadata["quarantined"] = True
+    g.save()
+    router = Router(ModelPool(store), ["prod=branch:main"])
+    watcher = LineageWatcher(LocalLineageSource(root), router, interval_s=30)
+    watcher.poll()
+    app = ServeApp(router, router.pool, watcher)
+    server, _ = start_in_thread(app)
+    try:
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _post(server.url + "/api/predict/prod", {})
+        assert ei.value.code == 503
+        assert "quarantined" in json.loads(ei.value.read())["error"]
+        assert app.counters["gate_refusals"] == 1
+    finally:
+        server.shutdown()
+        server.server_close()
