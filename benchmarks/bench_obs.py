@@ -1,0 +1,143 @@
+"""Observability overhead (DESIGN.md §14): the disabled path must be noise.
+
+Commits one base + ``N_DERIVATIVES`` finetunes through the pipelined
+store (the instrumented hot path: quantize/encode/hash spans inside the
+worker pool, pack-fsync at the commit point) under three configurations:
+
+* **stripped**  — ``span``/``propagate`` monkeypatched to no-ops, i.e. an
+  uninstrumented build (the baseline an overhead claim must compare to);
+* **disabled**  — the shipped default: tracing off, every ``span()`` call
+  is one branch returning a cached null context manager;
+* **enabled**   — tracing on, every span allocated and buffered.
+
+Reports relative commit-throughput overhead of *disabled* and *enabled*
+vs *stripped*, plus the direct cost of a disabled ``span()`` call in
+nanoseconds. Per the §14 contract the numbers are **measured, not
+asserted** — single-digit-percent wall-clock noise on a busy CI box
+would make an assertion flaky, so the trajectory lives in
+``BENCH_PR8.json`` where PRs diff it instead.
+
+Run directly: ``PYTHONPATH=src:. python -m benchmarks.bench_obs``
+"""
+
+from __future__ import annotations
+
+import contextlib
+import tempfile
+import time
+from typing import Dict
+
+from benchmarks.pools import base_model, finetune
+from repro.obs import reset_trace, span, tracing
+from repro.store import ArtifactStore
+from repro.store import artifact_store as _store_mod
+
+N_DERIVATIVES = 16
+REPEATS = 5
+SPAN_CALLS = 200_000
+
+
+def _commit_pool(models) -> float:
+    """Seconds to commit the whole pool into a fresh pipelined store."""
+    with tempfile.TemporaryDirectory() as root:
+        store = ArtifactStore(root=root, io_workers=4)
+        t0 = time.perf_counter()
+        parent = None
+        for name, art in models:
+            parent = store.commit_artifact(name, art, parent_ref=parent)
+        return time.perf_counter() - t0
+
+
+@contextlib.contextmanager
+def _stripped():
+    """Uninstrumented build: remove even the disabled-path branch."""
+    null = contextlib.nullcontext()
+    saved = _store_mod.span, _store_mod.propagate
+    _store_mod.span = lambda *a, **kw: null
+    _store_mod.propagate = lambda fn: fn
+    try:
+        yield
+    finally:
+        _store_mod.span, _store_mod.propagate = saved
+
+
+def _disabled_span_ns() -> float:
+    t0 = time.perf_counter()
+    for _ in range(SPAN_CALLS):
+        with span("bench.noop", cat="bench"):
+            pass
+    return (time.perf_counter() - t0) / SPAN_CALLS * 1e9
+
+
+def main() -> Dict[str, float]:
+    base = base_model(seed=0, n_layers=8, d=384)
+    models = [("base", base)] + [
+        (f"ft{i}", finetune(base, seed=10 + i)) for i in range(N_DERIVATIVES)]
+
+    _commit_pool(models)  # warmup: page cache, JIT'd codecs, pool spin-up
+
+    def run_stripped():
+        with _stripped():
+            return _commit_pool(models)
+
+    def run_disabled():
+        return _commit_pool(models)
+
+    def run_enabled():
+        reset_trace()
+        with tracing():
+            dt = _commit_pool(models)
+        reset_trace()
+        return dt
+
+    configs = [("stripped", run_stripped), ("disabled", run_disabled),
+               ("enabled", run_enabled)]
+    best = {name: float("inf") for name, _ in configs}
+    # rotate the configuration order each round so slow-start / cache
+    # drift never favors one slot; keep the best of each — min is the
+    # noise floor (wall-clock variance on a shared box swamps the true
+    # sub-0.1% disabled-path cost, hence the analytic bound below)
+    for i in range(REPEATS):
+        for name, run in configs[i % 3:] + configs[:i % 3]:
+            best[name] = min(best[name], run())
+
+    span_ns = _disabled_span_ns()
+    # analytic bound: spans actually hit during one traced pool commit ×
+    # the measured per-call disabled cost, as a fraction of commit time —
+    # immune to the wall-clock noise the A/B rows carry
+    reset_trace()
+    with tracing():
+        _commit_pool(models)
+    from repro.obs import export_chrome_trace
+    spans_per_commit = sum(1 for e in export_chrome_trace()["traceEvents"]
+                           if e.get("ph") == "X")
+    reset_trace()
+    bound_pct = spans_per_commit * span_ns * 1e-9 / best["disabled"] * 100
+
+    n = len(models)
+    row = {
+        "n_models": n,
+        "commit_stripped_s": round(best["stripped"], 4),
+        "commit_disabled_s": round(best["disabled"], 4),
+        "commit_enabled_s": round(best["enabled"], 4),
+        "disabled_overhead_pct": round(
+            (best["disabled"] / best["stripped"] - 1) * 100, 2),
+        "enabled_overhead_pct": round(
+            (best["enabled"] / best["stripped"] - 1) * 100, 2),
+        "disabled_span_ns": round(span_ns, 1),
+        "spans_per_commit": spans_per_commit,
+        "disabled_overhead_bound_pct": round(bound_pct, 4),
+        "models_per_s_disabled": round(n / best["disabled"], 2),
+    }
+    print(f"{'config':<12} {'commit_s':>9} {'overhead':>9}")
+    for cfg in ("stripped", "disabled", "enabled"):
+        over = (best[cfg] / best["stripped"] - 1) * 100
+        print(f"{cfg:<12} {best[cfg]:>9.4f} {over:>8.2f}%")
+    print(f"disabled span() call: {span_ns:.0f} ns; "
+          f"{spans_per_commit} spans/commit -> "
+          f"{bound_pct:.4f}% analytic bound")
+    return row
+
+
+if __name__ == "__main__":
+    main()

@@ -5,7 +5,8 @@ each benchmark's own table, and writes the machine-readable perf
 trajectory CI and future PRs diff against: ``BENCH_PR4.json`` (commit
 throughput, warm/cold checkout latency, dedup ratio) and
 ``BENCH_PR6.json`` (chunk-level dedup, streaming RSS, ranged pull) and
-``BENCH_PR7.json`` (serving resident density, hot-swap latency).
+``BENCH_PR7.json`` (serving resident density, hot-swap latency) and
+``BENCH_PR8.json`` (observability overhead: disabled-path commit cost).
 Usage: PYTHONPATH=src python -m benchmarks.run
 """
 
@@ -199,6 +200,34 @@ def main() -> None:
             },
         }, f, indent=1)
     print("wrote BENCH_PR7.json")
+
+    print("=" * 72)
+    print("§14 observability — disabled-path overhead on commit throughput")
+    print("=" * 72)
+    from benchmarks import bench_obs
+    obs = bench_obs.main()
+    _csv("obs_overhead", obs["commit_disabled_s"] * 1e6 / obs["n_models"],
+         f"disabled_pct={obs['disabled_overhead_pct']:.2f},"
+         f"bound_pct={obs['disabled_overhead_bound_pct']:.4f},"
+         f"span_ns={obs['disabled_span_ns']:.0f}")
+    with open("BENCH_PR8.json", "w") as f:
+        json.dump({
+            "commit_overhead": {
+                "n_models": obs["n_models"],
+                "stripped_s": obs["commit_stripped_s"],
+                "disabled_s": obs["commit_disabled_s"],
+                "enabled_s": obs["commit_enabled_s"],
+                "disabled_overhead_pct": obs["disabled_overhead_pct"],
+                "enabled_overhead_pct": obs["enabled_overhead_pct"],
+                "models_per_s_disabled": obs["models_per_s_disabled"],
+            },
+            "disabled_path": {
+                "span_call_ns": obs["disabled_span_ns"],
+                "spans_per_commit": obs["spans_per_commit"],
+                "overhead_bound_pct": obs["disabled_overhead_bound_pct"],
+            },
+        }, f, indent=1)
+    print("wrote BENCH_PR8.json")
 
     print("=" * 72)
     print("Storage kernels — CPU wall-time + TPU roofline bound")

@@ -72,6 +72,19 @@ Serving commands (DESIGN.md §13; the inference tier over -C repo's store):
                                 (canary=node:m@v2), or a raw manifest ref.
                                 Quarantined nodes never get traffic.
 
+Observability commands (DESIGN.md §14):
+    obs metrics                 print the process-wide metrics registry in
+                                Prometheus text exposition format (counters
+                                register at zero for a fresh process; run a
+                                command under `obs trace` or scrape a live
+                                daemon's /api/metrics for hot numbers)
+    obs trace [--out F] [cmd ...]
+                                run an mgit command with tracing enabled
+                                (default: a chain-folded checkout sweep of
+                                every stored node) and write the spans as
+                                Chrome-trace/Perfetto JSON — load the file
+                                at https://ui.perfetto.dev
+
 Diagnostics commands (paper §4; DESIGN.md §9):
     diag run [node] [--pattern P] [--match-glob] [--jobs N] [--force]
              [--builtin]        memoized parallel test sweep: unchanged
@@ -215,6 +228,16 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--prefetch", action="store_true",
                    help="batch-materialize each model before its tests run "
                         "(chain-folded, threaded checkout; DESIGN.md §10.3)")
+    p = sub.add_parser("obs",
+                       help="offline observability: metrics registry dump / "
+                            "traced command runs (DESIGN.md §14)")
+    p.add_argument("action", choices=["metrics", "trace"],
+                   help="observability subcommand")
+    p.add_argument("--out", default=None, metavar="FILE",
+                   help="trace output path (default: <repo>/trace.json)")
+    p.add_argument("rest", nargs=argparse.REMAINDER, metavar="CMD",
+                   help="mgit command to run under tracing (trace action; "
+                        "default: a checkout sweep of every stored node)")
     p = sub.add_parser("hub", help="model-hub daemon (DESIGN.md §11)")
     p.add_argument("action", choices=["serve", "stats"])
     p.add_argument("url", nargs="?",
@@ -268,6 +291,8 @@ def main(argv=None) -> int:
         return 0
     args = ap.parse_args(argv)
 
+    if args.cmd == "obs":
+        return _cmd_obs(args)
     if args.cmd == "hub":
         return _cmd_hub(args)
     if args.cmd == "serve":
@@ -443,6 +468,37 @@ def main(argv=None) -> int:
     return 0
 
 
+def _cmd_obs(args) -> int:
+    """`obs metrics` (registry dump) / `obs trace` (traced command run)."""
+    from repro.obs import render_prometheus, save_trace, tracing
+    if args.action == "metrics":
+        _graph(args.repo)  # registers the store's metric families
+        print(render_prometheus(), end="")
+        return 0
+    rest = [a for a in args.rest if a != "--"]
+    # REMAINDER swallows options placed after the action; recover --out
+    if len(rest) >= 2 and rest[0] == "--out":
+        args.out, rest = rest[1], rest[2:]
+    elif rest and rest[0].startswith("--out="):
+        args.out, rest = rest[0].split("=", 1)[1], rest[1:]
+    out = args.out or os.path.join(args.repo, "trace.json")
+    with tracing():
+        if rest:
+            rc = main(["-C", args.repo] + rest)
+        else:
+            g = _graph(args.repo)
+            refs = [(n.name, n.artifact_ref) for n in g.nodes.values()
+                    if n.artifact_ref]
+            for _, ref in refs:
+                g.store.materialize_artifact(ref)
+            print(f"traced a checkout sweep over {len(refs)} node(s)")
+            rc = 0
+    spans = save_trace(out)
+    # stderr: the traced command owns stdout (JSON output stays pipeable)
+    print(f"wrote {spans} span(s) to {out}", file=sys.stderr)
+    return rc
+
+
 def _cmd_hub(args) -> int:
     """`hub serve` (blocking daemon over -C repo) / `hub stats <url>`."""
     if args.action == "serve":
@@ -516,7 +572,9 @@ def _action_syntax(action: argparse.Action) -> str:
         name = action.metavar or action.dest
         if action.choices is not None and action.metavar is None:
             name = "{" + ",".join(str(c) for c in action.choices) + "}"
-        return f"[{name}]" if action.nargs in ("?", "*") else f"<{name}>"
+        if action.nargs in ("?", "*", argparse.REMAINDER):
+            return f"[{name}]"
+        return f"<{name}>"
     opts = ", ".join(action.option_strings)
     if action.nargs == 0:
         return f"`{opts}`"

@@ -38,6 +38,7 @@ from typing import Any, Dict, Iterable, Iterator, List, Mapping, Optional
 from typing import Sequence, Tuple
 
 from repro.hub.auth import TokenAuth
+from repro.obs import REGISTRY, Histogram, render_prometheus
 from repro.remote.journal import LocalJournalStore
 from repro.remote.transport import (ETAG_ABSENT, PublishConflict,
                                     lineage_etag)
@@ -58,12 +59,15 @@ class HubApp:
         self._publish_lock = threading.Lock()
         self._stats_lock = threading.Lock()
         self.started_at = time.time()
-        self.stats: Dict[str, int] = {
-            "requests": 0, "bytes_in": 0, "bytes_out": 0,
-            "objects_served": 0, "objects_received": 0,
-            "publishes": 0, "conflicts_409": 0, "quarantine_rejected": 0,
-            "auth_failures": 0, "finalizes": 0,
-        }
+        # registry-backed compat view: same count()/stats_json() surface,
+        # scrapeable as mgit_hub_* through GET /api/metrics (§14)
+        self.stats = REGISTRY.group(
+            "mgit_hub",
+            keys=("requests", "bytes_in", "bytes_out", "objects_served",
+                  "objects_received", "publishes", "conflicts_409",
+                  "quarantine_rejected", "auth_failures", "finalizes"),
+            help="hub request/transfer counters")
+        self._latency: Dict[Tuple[str, str], Histogram] = {}
 
     # -- stats ---------------------------------------------------------------
     def count(self, **deltas: int) -> None:
@@ -71,13 +75,41 @@ class HubApp:
             for key, d in deltas.items():
                 self.stats[key] = self.stats.get(key, 0) + d
 
+    def observe_request(self, method: str, route: str,
+                        seconds: float) -> None:
+        """Record one request into the per-route latency histogram."""
+        h = self._latency.get((method, route))
+        if h is None:
+            h = REGISTRY.histogram(
+                "mgit_http_request_seconds",
+                help="request latency by service/method/route",
+                service="hub", instance=self.stats.instance,
+                method=method, route=route)
+            self._latency[(method, route)] = h
+        h.observe(seconds)
+
+    def latency_json(self) -> Dict[str, Any]:
+        """Per-route p50/p99 estimated from the histogram buckets —
+        the same math a `histogram_quantile()` PromQL query would do."""
+        out: Dict[str, Any] = {}
+        for (method, route), h in sorted(self._latency.items()):
+            out[f"{method} {route}"] = {
+                "count": h.count,
+                "p50_ms": round((h.quantile(0.5) or 0.0) * 1e3, 3),
+                "p99_ms": round((h.quantile(0.99) or 0.0) * 1e3, 3)}
+        return out
+
+    def metrics_text(self) -> str:
+        """Prometheus text exposition of the whole process registry."""
+        return render_prometheus()
+
     def stats_json(self) -> Dict[str, Any]:
-        with self._stats_lock:
-            out: Dict[str, Any] = dict(self.stats)
+        out: Dict[str, Any] = self.stats.snapshot()
         out["uptime_seconds"] = round(time.time() - self.started_at, 3)
         out["objects"] = self.store.cas.object_count()
         out["physical_bytes"] = self.store.cas.physical_bytes()
         out["in_flight_transfers"] = list(self.journal.journal_list())
+        out["request_latency"] = self.latency_json()
         return out
 
     # -- lineage document ----------------------------------------------------

@@ -19,7 +19,8 @@ Endpoints (all JSON unless noted; see the §11.2 protocol table):
     GET    /api/journal[/<tid>]      transfer journal list / entry
     PUT    /api/journal/<tid>        persist a journal entry
     DELETE /api/journal/<tid>        retire a journal entry
-    GET    /api/stats                live counters
+    GET    /api/stats                live counters + per-route p50/p99
+    GET    /api/metrics              Prometheus text exposition (DESIGN §14)
     GET    /api/fsck                 integrity report of the served repo
 
 Object payloads stream zero-copy: single-object GETs and mget streams write
@@ -42,10 +43,29 @@ from typing import Any, Dict, Optional, Tuple
 from urllib.parse import unquote, urlsplit
 
 from repro.hub.app import HubApp
+from repro.obs import span
 from repro.remote.http import GZIP_FLOOR, WIRE_REC_HEAD, iter_records
 from repro.remote.transport import ETAG_ABSENT, PublishConflict
 
 _RANGE_RE = re.compile(r"bytes=(\d+)-(\d*)$")
+
+# Fixed-path routes the latency histogram may label with — dynamic path
+# tails collapse to :key/:tid and anything else to "other", so a scanner
+# walking random URLs cannot grow unbounded label cardinality.
+_FIXED_ROUTES = frozenset({
+    "/api/ping", "/api/lineage", "/api/have", "/api/objects/mget",
+    "/api/objects/sizes", "/api/objects", "/api/finalize", "/api/journal",
+    "/api/stats", "/api/metrics", "/api/fsck"})
+
+
+def route_family(path: str) -> str:
+    """Collapse a request path to its bounded-cardinality route label."""
+    if (path.startswith("/api/objects/")
+            and path not in ("/api/objects/mget", "/api/objects/sizes")):
+        return "/api/objects/:key"
+    if path.startswith("/api/journal/"):
+        return "/api/journal/:tid"
+    return path if path in _FIXED_ROUTES else "other"
 
 # CAS keys and journal ids are hash-derived tokens; anything else in the
 # path tail is hostile (os.path.join would resolve '../' segments OUTSIDE
@@ -150,13 +170,16 @@ class HubRequestHandler(BaseHTTPRequestHandler):
             time.sleep(self.server.delay_s)  # type: ignore[attr-defined]
         if not self._authorized(path):
             return
+        route = route_family(path)
+        t0 = time.perf_counter()
         try:
-            handler = self._resolve(method, path)
-            if handler is None:
-                self._send_json({"error": f"no route {method} {path}"},
-                                status=404)
-                return
-            handler()
+            with span("hub.request", cat="hub", method=method, route=route):
+                handler = self._resolve(method, path)
+                if handler is None:
+                    self._send_json({"error": f"no route {method} {path}"},
+                                    status=404)
+                    return
+                handler()
         except PublishConflict as exc:
             self._send_json({"error": "lineage moved",
                              "etag": exc.current_etag}, status=409)
@@ -166,6 +189,9 @@ class HubRequestHandler(BaseHTTPRequestHandler):
             raise  # client went away mid-response; nothing to send
         except Exception as exc:  # noqa: BLE001 — daemon must not die
             self._send_json({"error": f"internal: {exc}"}, status=500)
+        finally:
+            self.app.observe_request(method, route,
+                                     time.perf_counter() - t0)
 
     def _resolve(self, method: str, path: str):
         if (path.startswith("/api/objects/")
@@ -195,6 +221,7 @@ class HubRequestHandler(BaseHTTPRequestHandler):
             ("POST", "/api/finalize"): self._finalize,
             ("GET", "/api/journal"): self._journal_list,
             ("GET", "/api/stats"): self._stats,
+            ("GET", "/api/metrics"): self._metrics,
             ("GET", "/api/fsck"): self._fsck,
         }
         return table.get((method, path))
@@ -352,6 +379,17 @@ class HubRequestHandler(BaseHTTPRequestHandler):
 
     def _stats(self) -> None:
         self._send_json(self.app.stats_json())
+
+    def _metrics(self) -> None:
+        # Prometheus text, NOT json — scrapers parse the exposition format
+        body = self.app.metrics_text().encode()
+        self.send_response(200)
+        self.send_header("Content-Type",
+                         "text/plain; version=0.0.4; charset=utf-8")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+        self.app.count(bytes_out=len(body))
 
     def _fsck(self) -> None:
         self._send_json(self.app.fsck())

@@ -39,12 +39,14 @@ import http.client
 import json
 import os
 import struct
+import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
-from typing import Dict, Iterable, Iterator, List, Mapping, Optional
+from typing import Any, Dict, Iterable, Iterator, List, Mapping, Optional
 from typing import Sequence, Set, Tuple
 from urllib.parse import urlsplit
 
+from repro.obs import REGISTRY, propagate, span
 from repro.remote.transport import (ETAG_ABSENT, PublishConflict, Transport,
                                     lineage_etag)
 
@@ -62,6 +64,20 @@ TOKEN_ENV = "MGIT_HUB_TOKEN"
 
 class HubUnavailable(ConnectionError):
     """The hub could not be reached after all retries."""
+
+
+def endpoint_family(path: str) -> str:
+    """Bounded label for per-endpoint-family retry accounting."""
+    p = path.split("?", 1)[0]
+    for prefix, family in (("/api/objects", "objects"),
+                           ("/api/journal", "journal"),
+                           ("/api/lineage", "lineage"),
+                           ("/api/have", "negotiate"),
+                           ("/api/finalize", "finalize"),
+                           ("/api/ping", "ping")):
+        if p.startswith(prefix):
+            return family
+    return "other"
 
 
 def encode_records(objects: Mapping[str, bytes]) -> bytes:
@@ -114,6 +130,41 @@ class HttpTransport(Transport):
         self.timeout = timeout
         self.retries = retries
         self.backoff = backoff
+        # retry observability (ISSUE 8): per-endpoint-family counts of
+        # retried attempts, seconds slept in backoff, and requests that
+        # exhausted every retry. Instance-local (surfaced per-sync through
+        # SyncReport via retry_stats()); mirrored into process-wide
+        # mgit_http_retry* registry counters for /api/metrics.
+        self._retry_lock = threading.Lock()
+        self._retries: Dict[str, int] = {}
+        self._backoff_s: Dict[str, float] = {}
+        self._terminal: Dict[str, int] = {}
+
+    def _record_retry(self, family: str, sleep_s: float) -> None:
+        with self._retry_lock:
+            self._retries[family] = self._retries.get(family, 0) + 1
+            self._backoff_s[family] = (self._backoff_s.get(family, 0.0)
+                                       + sleep_s)
+        REGISTRY.counter("mgit_http_retries",
+                         help="retried hub requests", family=family).inc()
+        REGISTRY.counter("mgit_http_backoff_seconds",
+                         help="seconds slept in retry backoff",
+                         family=family).inc(sleep_s)
+
+    def _record_terminal(self, family: str) -> None:
+        with self._retry_lock:
+            self._terminal[family] = self._terminal.get(family, 0) + 1
+        REGISTRY.counter("mgit_http_terminal_failures",
+                         help="hub requests that exhausted all retries",
+                         family=family).inc()
+
+    def retry_stats(self) -> Dict[str, Any]:
+        """Per-family retry/backoff/terminal-failure counts so far."""
+        with self._retry_lock:
+            return {"retries": dict(self._retries),
+                    "backoff_s": {k: round(v, 3)
+                                  for k, v in self._backoff_s.items()},
+                    "terminal_failures": dict(self._terminal)}
 
     # -- one HTTP round-trip with retry/backoff -----------------------------
     def _connect(self) -> http.client.HTTPConnection:
@@ -142,6 +193,7 @@ class HttpTransport(Transport):
                 hdrs["Content-Encoding"] = "gzip"
         if headers:
             hdrs.update(headers)
+        family = endpoint_family(path)
         last_exc: Optional[BaseException] = None
         for attempt in range(self.retries + 1):
             try:
@@ -165,7 +217,10 @@ class HttpTransport(Transport):
             except (OSError, http.client.HTTPException) as exc:
                 last_exc = exc
                 if attempt < self.retries:
-                    time.sleep(self.backoff * (2 ** attempt))
+                    sleep_s = self.backoff * (2 ** attempt)
+                    self._record_retry(family, sleep_s)
+                    time.sleep(sleep_s)
+        self._record_terminal(family)
         raise HubUnavailable(
             f"hub at {self.url} unreachable after "
             f"{self.retries + 1} attempts: {last_exc}") from last_exc
@@ -262,10 +317,13 @@ class HttpTransport(Transport):
             return self.read_object_range(key, 0, size)
         spans = [(off, min(part_bytes, size - off))
                  for off in range(0, size, part_bytes)]
-        with ThreadPoolExecutor(max_workers=max(1, workers),
-                                thread_name_prefix="range-get") as pool:
-            parts = list(pool.map(
-                lambda s: self.read_object_range(key, s[0], s[1]), spans))
+        with span("http.ranged_pull", cat="remote", key=key,
+                  parts=len(spans)):
+            one = propagate(
+                lambda s: self.read_object_range(key, s[0], s[1]))
+            with ThreadPoolExecutor(max_workers=max(1, workers),
+                                    thread_name_prefix="range-get") as pool:
+                parts = list(pool.map(one, spans))
         data = b"".join(parts)
         if len(data) != size:
             raise HubUnavailable(

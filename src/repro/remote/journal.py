@@ -34,6 +34,7 @@ import os
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.common.hashing import bytes_hash
+from repro.obs import propagate, span
 from repro.remote.negotiate import chunked
 
 #: parallel chunk workers per transfer
@@ -132,8 +133,18 @@ def run_journalled_transfer(journal_store, tid: str, order: Sequence[str],
     moved_objects = 0
     moved_bytes = 0
     first_error: Optional[BaseException] = None
+
+    def traced_move(cid, keys):
+        with span("journal.chunk", cat="remote", chunk=cid,
+                  objects=len(keys)):
+            return move_chunk(keys)
+
+    # propagate(): worker threads never saw the caller's contextvars, so
+    # without the wrap the per-chunk spans would float parentless instead
+    # of nesting under the surrounding push/pull transfer span
+    moved = propagate(traced_move)
     with cf.ThreadPoolExecutor(max_workers=max(1, workers)) as ex:
-        futures = {ex.submit(move_chunk, keys): (cid, keys)
+        futures = {ex.submit(moved, cid, keys): (cid, keys)
                    for cid, keys in pending}
         for fut in cf.as_completed(futures):
             cid, keys = futures[fut]

@@ -44,6 +44,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.lineage import LineageGraph
+from repro.obs import span
 from repro.core.merge import (CONFLICT, NO_CONFLICT, POSSIBLE_CONFLICT,
                               merge_artifacts)
 from repro.remote.journal import (LocalJournalStore, run_journalled_transfer,
@@ -386,6 +387,15 @@ class SyncReport:
         default_factory=list)
     merge: Optional[LineageMergeReport] = None
     published: bool = True
+    # transport-level reliability (ISSUE 8): a push that limped through
+    # 5xx storms or connection resets says so instead of looking clean.
+    # Per-endpoint-family dicts come from HttpTransport.retry_stats()
+    # deltas over this one sync; LocalTransport syncs report zeros.
+    transport_retries: int = 0
+    transport_backoff_s: float = 0.0
+    transport_terminal_failures: int = 0
+    transport_retries_by_family: Dict[str, int] = dataclasses.field(
+        default_factory=dict)
 
     @property
     def dedup_ratio(self) -> float:
@@ -462,6 +472,31 @@ class _ImportingFetch:
         return out
 
 
+def _retry_snapshot(transport) -> Optional[Dict[str, Any]]:
+    fn = getattr(transport, "retry_stats", None)
+    return fn() if callable(fn) else None
+
+
+def _retry_delta(transport, before: Optional[Dict[str, Any]]
+                 ) -> Dict[str, Any]:
+    """What this sync's transport retried, as SyncReport field values."""
+    after = _retry_snapshot(transport)
+    if after is None or before is None:
+        return {}
+    by_family = {
+        fam: n - before["retries"].get(fam, 0)
+        for fam, n in after["retries"].items()
+        if n - before["retries"].get(fam, 0) > 0}
+    backoff = (sum(after["backoff_s"].values())
+               - sum(before["backoff_s"].values()))
+    terminal = (sum(after["terminal_failures"].values())
+                - sum(before["terminal_failures"].values()))
+    return {"transport_retries": sum(by_family.values()),
+            "transport_backoff_s": round(max(backoff, 0.0), 3),
+            "transport_terminal_failures": max(terminal, 0),
+            "transport_retries_by_family": by_family}
+
+
 def push(graph: LineageGraph, transport: Transport,
          filter: Optional[str] = None, state: Optional[RemoteState] = None,
          force: bool = False, chunk_size: int = CHUNK_OBJECTS,
@@ -478,10 +513,20 @@ def push(graph: LineageGraph, transport: Transport,
     must not propagate to collaborators by default. Their manifests still
     ship as storage-only chain dependencies when a pushed descendant's
     delta chain needs them, so everything sent reconstructs."""
+    with span("sync.push", cat="remote"):
+        return _push(graph, transport, filter, state, force, chunk_size,
+                     include_quarantined)
+
+
+def _push(graph: LineageGraph, transport: Transport,
+          filter: Optional[str], state: Optional[RemoteState],
+          force: bool, chunk_size: int,
+          include_quarantined: bool) -> SyncReport:
     store = graph.store
     if store is None:
         raise ValueError("push requires a store-backed lineage graph")
     state = state or RemoteState(None, None)
+    retry_before = _retry_snapshot(transport)
     transport.ensure_repo()
 
     ours_payload = graph.to_payload()
@@ -495,7 +540,8 @@ def push(graph: LineageGraph, transport: Transport,
     refs = [n["artifact_ref"] for n in selected if n.get("artifact_ref")]
     closure = walk_manifests(_local_fetch(store), refs)
 
-    remote_have = transport.have(sorted(closure_keys(closure)))
+    with span("sync.negotiate", cat="remote", keys=len(closure)):
+        remote_have = transport.have(sorted(closure_keys(closure)))
 
     # Shallow push: flatten manifests whose delta chain leaves the selection
     # AND is absent on the receiver; prefer the delta form otherwise. The
@@ -519,7 +565,9 @@ def push(graph: LineageGraph, transport: Transport,
             refs = [n["artifact_ref"] for n in selected
                     if n.get("artifact_ref")]
             closure = walk_manifests(_extra_first(extra_objects, store), refs)
-            remote_have = transport.have(sorted(closure_keys(closure)))
+            with span("sync.negotiate", cat="remote", keys=len(closure),
+                      reason="post-flatten"):
+                remote_have = transport.have(sorted(closure_keys(closure)))
 
     plan = plan_transfer(closure, remote_have)
     read_local = _extra_first(extra_objects, store)
@@ -530,9 +578,11 @@ def push(graph: LineageGraph, transport: Transport,
         return sum(len(v) for v in objs.values())
 
     tid = transfer_id(plan.order, "push")
-    moved, moved_bytes, resumed = run_journalled_transfer(
-        transport, tid, plan.order, plan.wants, "push", move_chunk,
-        chunk_size)
+    with span("sync.transfer", cat="remote", direction="push",
+              objects=len(plan.wants)):
+        moved, moved_bytes, resumed = run_journalled_transfer(
+            transport, tid, plan.order, plan.wants, "push", move_chunk,
+            chunk_size)
 
     theirs_payload = {"nodes": selected}
     # Roles from the REMOTE's point of view: its document is "ours", the
@@ -569,7 +619,9 @@ def push(graph: LineageGraph, transport: Transport,
                 merged_nodes[node["name"]] = node
             merged = {"nodes": list(merged_nodes.values())}
         try:
-            ack = transport.publish_lineage(merged, expected=remote_etag)
+            with span("sync.publish", cat="remote"):
+                ack = transport.publish_lineage(merged,
+                                                expected=remote_etag)
         except PublishConflict:
             publish_retries += 1
             published = False
@@ -608,7 +660,8 @@ def push(graph: LineageGraph, transport: Transport,
                       publish_retries=publish_retries, flattened=flattened,
                       quarantined_skipped=quarantined_skipped,
                       quarantine_rejected_by_remote=server_rejected,
-                      merge=report, published=published)
+                      merge=report, published=published,
+                      **_retry_delta(transport, retry_before))
 
 
 def pull(graph: LineageGraph, transport: Transport,
@@ -622,10 +675,18 @@ def pull(graph: LineageGraph, transport: Transport,
     every pulled parameter reconstructs. Divergent nodes auto-merge at the
     artifact level when the paper-§5 decision tree allows; ``conflict`` keeps the
     local version and is reported."""
+    with span("sync.pull", cat="remote"):
+        return _pull(graph, transport, filter, state, chunk_size)
+
+
+def _pull(graph: LineageGraph, transport: Transport,
+          filter: Optional[str], state: Optional[RemoteState],
+          chunk_size: int) -> SyncReport:
     store = graph.store
     if store is None:
         raise ValueError("pull requires a store-backed lineage graph")
     state = state or RemoteState(None, None)
+    retry_before = _retry_snapshot(transport)
     repo = graph.path or store.cas.root or "."
 
     remote_payload = transport.fetch_lineage()
@@ -634,9 +695,11 @@ def pull(graph: LineageGraph, transport: Transport,
     selected = _select_nodes(remote_payload, filter)
     refs = [n["artifact_ref"] for n in selected if n.get("artifact_ref")]
     fetch = _ImportingFetch(store, transport)  # negotiation reads are kept
-    closure = walk_manifests(fetch, refs)
-    local_have = {k for k in closure_keys(closure) if store.cas.has(k)}
-    plan = plan_transfer(closure, local_have)
+    with span("sync.negotiate", cat="remote"):
+        closure = walk_manifests(fetch, refs)
+        local_have = {k for k in closure_keys(closure)
+                      if store.cas.has(k)}
+        plan = plan_transfer(closure, local_have)
 
     def move_chunk(keys: List[str]) -> int:
         objs = fetch_objects(transport, keys)
@@ -644,9 +707,11 @@ def pull(graph: LineageGraph, transport: Transport,
         return sum(len(v) for v in objs.values())
 
     tid = transfer_id(plan.order, "pull")
-    moved, moved_bytes, resumed = run_journalled_transfer(
-        LocalJournalStore(repo), tid, plan.order, plan.wants, "pull",
-        move_chunk, chunk_size)
+    with span("sync.transfer", cat="remote", direction="pull",
+              objects=len(plan.wants)):
+        moved, moved_bytes, resumed = run_journalled_transfer(
+            LocalJournalStore(repo), tid, plan.order, plan.wants, "pull",
+            move_chunk, chunk_size)
     moved += fetch.imported
     moved_bytes += fetch.imported_bytes
 
@@ -679,7 +744,8 @@ def pull(graph: LineageGraph, transport: Transport,
                       selected_nodes=[n["name"] for n in selected],
                       objects_total=plan.total, objects_transferred=moved,
                       bytes_transferred=moved_bytes, chunks_resumed=resumed,
-                      merge=report)
+                      merge=report,
+                      **_retry_delta(transport, retry_before))
 
 
 def clone(url: str, dest: str, filter: Optional[str] = None) -> SyncReport:

@@ -39,6 +39,7 @@ import numpy as np
 from repro.common.hashing import tensor_hash
 from repro.core.artifact import ModelArtifact
 from repro.core.graphir import LayerGraph
+from repro.obs import REGISTRY, span
 from repro.store.delta import decode_q, host_dequant
 
 
@@ -133,12 +134,14 @@ class ModelPool:
         self._base_ref: Optional[str] = None
         self._base_by_hash: Dict[str, np.ndarray] = {}
         self.base_bytes = 0
-        self.stats_counters = {
-            "views_built": 0, "hits": 0, "misses": 0, "evictions": 0,
-            "params_aliased": 0, "params_applied": 0, "chain_hops": 0,
-            "segments_applied": 0, "fused_applies": 0, "params_verified": 0,
-            "bytes_aliased": 0,
-        }
+        # registry-backed compat view (mgit_pool_* in /api/metrics)
+        self.stats_counters = REGISTRY.group(
+            "mgit_pool",
+            keys=("views_built", "hits", "misses", "evictions",
+                  "params_aliased", "params_applied", "chain_hops",
+                  "segments_applied", "fused_applies", "params_verified",
+                  "bytes_aliased"),
+            help="serving pool residency counters")
 
     # -- base residency ------------------------------------------------------
     def base_ref_of(self, ref: str) -> str:
@@ -212,6 +215,10 @@ class ModelPool:
 
     def _build_view(self, ref: str) -> ResidentView:
         t0 = time.perf_counter()
+        with span("pool.build_view", cat="serve", ref=ref):
+            return self._build_view_inner(ref, t0)
+
+    def _build_view_inner(self, ref: str, t0: float) -> ResidentView:
         self.ensure_base(ref)
         manifest = self.store.get_manifest(ref)
         params: Dict[str, np.ndarray] = {}
@@ -328,5 +335,5 @@ class ModelPool:
             "resident": len(views),
             "private_bytes": sum(v["private_bytes"] for v in views),
             "views": views,
-            **self.stats_counters,
+            **self.stats_counters.snapshot(),
         }

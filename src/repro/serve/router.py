@@ -28,7 +28,14 @@ from contextlib import contextmanager
 from typing import Any, Dict, List, Optional
 
 from repro.core.quarantine import is_quarantined
+from repro.obs import REGISTRY, span
 from repro.serve.pool import ModelPool, ResidentView
+
+# process-wide drain accounting: a view fully drained (last lease released
+# after a swap displaced it) is the moment its memory is reclaimable
+_DRAINED = REGISTRY.counter(
+    "mgit_router_views_drained",
+    help="displaced views whose last in-flight lease has released")
 
 
 class EndpointUnavailable(Exception):
@@ -132,8 +139,11 @@ class Endpoint:
 
     def _reap(self) -> None:
         with self._lock:
-            self._draining = [v for v in self._draining
-                              if v.active_leases > 0]
+            still = [v for v in self._draining if v.active_leases > 0]
+            drained = len(self._draining) - len(still)
+            self._draining = still
+        if drained:
+            _DRAINED.inc(drained)
 
     @property
     def current_ref(self) -> Optional[str]:
@@ -213,8 +223,9 @@ class Router:
                 ep.node = node
             return {"status": "unchanged", "node": node, "ref": ref}
         t0 = time.perf_counter()
-        view = self.pool.get(ref)      # built before the pointer moves
-        ep.swap(view, node, time.perf_counter() - t0)
+        with span("endpoint.swap", cat="serve", endpoint=ep.name, ref=ref):
+            view = self.pool.get(ref)  # built before the pointer moves
+            ep.swap(view, node, time.perf_counter() - t0)
         return {"status": "swapped", "node": node, "ref": ref}
 
     # -- request path --------------------------------------------------------

@@ -9,7 +9,9 @@ Endpoints (all JSON):
 
     GET  /api/ping                liveness
     GET  /api/endpoints           endpoint table: node, ref, gate, swaps
-    GET  /api/stats               router + pool + watcher counters
+    GET  /api/stats               router + pool + watcher counters,
+                                  per-route p50/p99
+    GET  /api/metrics             Prometheus text exposition (DESIGN §14)
     POST /api/predict/<endpoint>  {"x": [[...]]}? -> {"node","ref","y",...}
     POST /api/refresh             force one watcher poll (CI/tests: no
                                   need to wait out the poll interval)
@@ -20,6 +22,7 @@ from __future__ import annotations
 import gzip
 import json
 import threading
+import time
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Any, Dict, Optional, Tuple
 from urllib.parse import unquote, urlsplit
@@ -27,10 +30,21 @@ from urllib.parse import unquote, urlsplit
 import numpy as np
 
 from repro.hub.routes import _safe_id
+from repro.obs import REGISTRY, Histogram, render_prometheus, span
 from repro.remote.http import GZIP_FLOOR
 from repro.serve.pool import BitIdentityError, ModelPool
 from repro.serve.router import EndpointUnavailable, Router
 from repro.serve.watch import LineageWatcher
+
+_FIXED_ROUTES = frozenset({"/api/ping", "/api/endpoints", "/api/stats",
+                           "/api/metrics", "/api/refresh"})
+
+
+def route_family(path: str) -> str:
+    """Bounded-cardinality route label (mirrors hub.routes.route_family)."""
+    if path.startswith("/api/predict/"):
+        return "/api/predict/:endpoint"
+    return path if path in _FIXED_ROUTES else "other"
 
 
 class ServeApp:
@@ -42,16 +56,46 @@ class ServeApp:
         self.pool = pool
         self.watcher = watcher
         self._lock = threading.Lock()
-        self.counters = {"requests": 0, "predictions": 0, "gate_refusals": 0}
+        # registry-backed compat view (mgit_serve_* in /api/metrics)
+        self.counters = REGISTRY.group(
+            "mgit_serve",
+            keys=("requests", "predictions", "gate_refusals"),
+            help="serve daemon request counters")
+        self._latency: Dict[Tuple[str, str], Histogram] = {}
 
     def count(self, **deltas: int) -> None:
         with self._lock:
             for k, v in deltas.items():
                 self.counters[k] += v
 
+    def observe_request(self, method: str, route: str,
+                        seconds: float) -> None:
+        h = self._latency.get((method, route))
+        if h is None:
+            h = REGISTRY.histogram(
+                "mgit_http_request_seconds",
+                help="request latency by service/method/route",
+                service="serve", instance=self.counters.instance,
+                method=method, route=route)
+            self._latency[(method, route)] = h
+        h.observe(seconds)
+
+    def latency_json(self) -> Dict[str, Any]:
+        out: Dict[str, Any] = {}
+        for (method, route), h in sorted(self._latency.items()):
+            out[f"{method} {route}"] = {
+                "count": h.count,
+                "p50_ms": round((h.quantile(0.5) or 0.0) * 1e3, 3),
+                "p99_ms": round((h.quantile(0.99) or 0.0) * 1e3, 3)}
+        return out
+
+    def metrics_text(self) -> str:
+        return render_prometheus()
+
     def stats_json(self) -> Dict[str, Any]:
-        out = {"service": "mgit-serve", **self.counters,
-               "router": self.router.stats(), "pool": self.pool.stats()}
+        out = {"service": "mgit-serve", **self.counters.snapshot(),
+               "router": self.router.stats(), "pool": self.pool.stats(),
+               "request_latency": self.latency_json()}
         if self.watcher is not None:
             out["watch"] = self.watcher.stats()
         return out
@@ -95,13 +139,17 @@ class ServeRequestHandler(BaseHTTPRequestHandler):
     def _route(self, method: str) -> None:
         path = unquote(urlsplit(self.path).path).rstrip("/") or "/"
         self.app.count(requests=1)
+        route = route_family(path)
+        t0 = time.perf_counter()
         try:
-            handler = self._resolve(method, path)
-            if handler is None:
-                self._send_json({"error": f"no route {method} {path}"},
-                                status=404)
-                return
-            handler()
+            with span("serve.request", cat="serve", method=method,
+                      route=route):
+                handler = self._resolve(method, path)
+                if handler is None:
+                    self._send_json({"error": f"no route {method} {path}"},
+                                    status=404)
+                    return
+                handler()
         except EndpointUnavailable as exc:
             # the serving gate: quarantined/empty endpoints refuse traffic
             self.app.count(gate_refusals=1)
@@ -114,6 +162,9 @@ class ServeRequestHandler(BaseHTTPRequestHandler):
             raise  # client went away mid-response; nothing to send
         except Exception as exc:  # noqa: BLE001 — daemon must not die
             self._send_json({"error": f"internal: {exc}"}, status=500)
+        finally:
+            self.app.observe_request(method, route,
+                                     time.perf_counter() - t0)
 
     def _resolve(self, method: str, path: str):
         if path.startswith("/api/predict/"):
@@ -125,6 +176,7 @@ class ServeRequestHandler(BaseHTTPRequestHandler):
             ("GET", "/api/ping"): self._ping,
             ("GET", "/api/endpoints"): self._endpoints,
             ("GET", "/api/stats"): self._stats,
+            ("GET", "/api/metrics"): self._metrics,
             ("POST", "/api/refresh"): self._refresh,
         }
         return table.get((method, path))
@@ -145,6 +197,16 @@ class ServeRequestHandler(BaseHTTPRequestHandler):
 
     def _stats(self) -> None:
         self._send_json(self.app.stats_json())
+
+    def _metrics(self) -> None:
+        # Prometheus text, NOT json — scrapers parse the exposition format
+        body = self.app.metrics_text().encode()
+        self.send_response(200)
+        self.send_header("Content-Type",
+                         "text/plain; version=0.0.4; charset=utf-8")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
 
     def _predict(self, name: str) -> None:
         body = self._read_json()

@@ -18,12 +18,16 @@ wait out the poll interval).
 from __future__ import annotations
 
 import json
+import logging
 import os
 import threading
 from typing import Any, Dict, Optional, Tuple
 
+from repro.obs import REGISTRY
 from repro.remote.transport import ETAG_ABSENT, lineage_etag
 from repro.serve.router import Router
+
+logger = logging.getLogger("repro.serve.watch")
 
 
 class LocalLineageSource:
@@ -66,6 +70,17 @@ class LineageWatcher:
         self.last_etag: Optional[str] = None
         self.polls = 0
         self.changes = 0
+        # failure visibility (ISSUE 8): a flaky source must not end the
+        # loop, but it must not be silent either — failures count into the
+        # registry, the latest error is inspectable via stats(), and the
+        # FIRST failure after a healthy poll logs at WARN (one line per
+        # outage, not one per tick).
+        self.last_error: Optional[str] = None
+        self.consecutive_failures = 0
+        self._failures = REGISTRY.counter(
+            "mgit_watch_poll_failures",
+            help="lineage watcher polls that raised",
+            source=source.describe())
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
 
@@ -73,6 +88,8 @@ class LineageWatcher:
         """One fetch+compare; refreshes the router only on a new etag."""
         payload, etag = self.source.fetch()
         self.polls += 1
+        self.last_error = None
+        self.consecutive_failures = 0
         if etag == self.last_etag:
             return {"changed": False, "etag": etag}
         # a publish may have been committed by another process (CLI merge,
@@ -85,12 +102,24 @@ class LineageWatcher:
         self.changes += 1
         return {"changed": True, "etag": etag, "endpoints": report}
 
+    def _record_failure(self, exc: Exception) -> None:
+        first = self.consecutive_failures == 0
+        self.consecutive_failures += 1
+        self.last_error = f"{type(exc).__name__}: {exc}"
+        self._failures.inc()
+        if first:
+            logger.warning("lineage watch poll of %s failed: %s "
+                           "(retrying every %.1fs)",
+                           self.source.describe(), self.last_error,
+                           self.interval_s)
+
     def run(self) -> None:
         while not self._stop.wait(self.interval_s):
             try:
                 self.poll()
-            except Exception:  # noqa: BLE001 — a flaky fetch must not end
-                pass           # the loop; the next tick retries
+            except Exception as exc:  # noqa: BLE001 — a flaky fetch must
+                self._record_failure(exc)  # not end the loop; the next
+                                           # tick retries
 
     def start(self) -> "LineageWatcher":
         self._thread = threading.Thread(target=self.run, name="mgit-watch",
@@ -106,4 +135,7 @@ class LineageWatcher:
     def stats(self) -> Dict[str, Any]:
         return {"source": self.source.describe(), "polls": self.polls,
                 "changes": self.changes, "etag": self.last_etag,
-                "interval_s": self.interval_s}
+                "interval_s": self.interval_s,
+                "poll_failures": int(self._failures.get()),
+                "consecutive_failures": self.consecutive_failures,
+                "last_error": self.last_error}

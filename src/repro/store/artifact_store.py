@@ -58,6 +58,7 @@ import numpy as np
 from repro.common.hashing import TensorHasher, bytes_hash, tensor_hash
 from repro.core.artifact import LazyParams, ModelArtifact, ParamRef
 from repro.core.graphir import LayerGraph
+from repro.obs import REGISTRY, propagate, span
 from repro.store import chunks as chunklib
 from repro.store.cas import CAS, DEFAULT_PACK_THRESHOLD
 from repro.store.codecs import get_codec, pick_codec
@@ -294,13 +295,18 @@ class ArtifactStore:
         self.fold_cache = FoldCache(fold_budget_bytes)
         self.logical_bytes = 0
         self.last_result: Optional[CompressResult] = None
-        # per-store materialization accounting (reset with reset_io_stats)
-        self.io_stats = {"tensors_materialized": 0, "bytes_materialized": 0,
-                         "chain_hops": 0, "plans_resolved": 0,
-                         "dequant_calls": 0, "hops_folded": 0, "fold_hits": 0,
-                         "chunks_written": 0, "chunk_bytes_written": 0,
-                         "chunks_deduped": 0, "chunk_delta_blobs": 0,
-                         "chunk_passthrough": 0, "chunks_read": 0}
+        # per-store materialization accounting (reset with reset_io_stats).
+        # A registry-backed dict view: same `io_stats[k] += n` call sites,
+        # but the counters are scrapeable as mgit_store_* and multi-key
+        # snapshot/reset are atomic (DESIGN.md §14).
+        self.io_stats = REGISTRY.group(
+            "mgit_store",
+            keys=("tensors_materialized", "bytes_materialized",
+                  "chain_hops", "plans_resolved", "dequant_calls",
+                  "hops_folded", "fold_hits", "chunks_written",
+                  "chunk_bytes_written", "chunks_deduped",
+                  "chunk_delta_blobs", "chunk_passthrough", "chunks_read"),
+            help="ArtifactStore I/O accounting")
         self._lock = threading.RLock()   # manifests dict + counters
         self._stats_path = (os.path.join(root, "store_stats.json")
                             if root else None)
@@ -354,6 +360,12 @@ class ArtifactStore:
     def commit_artifact(self, name: str, artifact: ModelArtifact,
                         parent_ref: Optional[str] = None,
                         tests: Sequence = ()) -> str:
+        with span("store.commit", cat="store", model=name):
+            return self._commit_artifact(name, artifact, parent_ref, tests)
+
+    def _commit_artifact(self, name: str, artifact: ModelArtifact,
+                         parent_ref: Optional[str],
+                         tests: Sequence) -> str:
         with self._lock:
             self.logical_bytes += artifact.nbytes()
         self._persist_stats()
@@ -458,7 +470,8 @@ class ArtifactStore:
                 value = artifact.params.get(ckey)
                 if value is not None:
                     self.cache.put((ref, ckey), np.asarray(value))
-        self.cas.flush()  # commit point: index + refcounts durable
+        with span("commit.pack_fsync", cat="store"):
+            self.cas.flush()  # commit point: index + refcounts durable
         return ref
 
     def _delta_compress_pipelined(self, child: ModelArtifact, parent_ref: str,
@@ -492,16 +505,18 @@ class ArtifactStore:
             p2 = np.asarray(child.params[ckey])
             if p1.size == 0:
                 return None
-            if host:  # numpy twin, bit-identical, no dispatch overhead
-                q, nz, _narrow = host_snapshot(p1, p2, self.eps)
-            else:
-                q, nz, _fp, _narrow = ops.snapshot_fused(
-                    p1, p2, eps=self.eps, backend=self.backend,
-                    with_fingerprint=False)
-                q = np.asarray(q)
+            with span("commit.quantize", cat="store", key=ckey):
+                if host:  # numpy twin, bit-identical, no dispatch overhead
+                    q, nz, _narrow = host_snapshot(p1, p2, self.eps)
+                else:
+                    q, nz, _fp, _narrow = ops.snapshot_fused(
+                        p1, p2, eps=self.eps, backend=self.backend,
+                        with_fingerprint=False)
+                    q = np.asarray(q)
             if nz / q.size < self.zero_frac_prefilter:
                 return None  # on-device pre-filter: won't compress
-            blob = cod.encode(q)
+            with span("commit.encode", cat="store", key=ckey):
+                blob = cod.encode(q)
             if self.per_param and len(blob) >= p2.nbytes:
                 return None  # no saving for this tensor
             q32 = q if q.dtype == np.int32 else q.astype(np.int32)
@@ -512,12 +527,19 @@ class ArtifactStore:
                 child_key=ckey, parent_key=pkey, blob=blob, codec=self.codec,
                 eps=self.eps, shape=tuple(p2.shape), dtype=str(p2.dtype),
                 raw_bytes=int(p2.nbytes), qdtype=str(q.dtype))
-            return ckey, delta, recon, tensor_hash(recon), state
+            with span("commit.hash", cat="store", key=ckey):
+                thash = tensor_hash(recon)
+            return ckey, delta, recon, thash, state
 
-        if len(pairs) > 1 and self.io_workers > 1:
-            produced = list(self._executor().map(process, pairs))
-        else:
-            produced = [process(p) for p in pairs]
+        # the delta span is the propagation anchor: worker-side
+        # quantize/encode/hash spans parent here even though the pool
+        # threads never saw this contextvar scope
+        with span("commit.delta", cat="store", params=len(pairs)):
+            if len(pairs) > 1 and self.io_workers > 1:
+                produced = list(self._executor().map(propagate(process),
+                                                     pairs))
+            else:
+                produced = [process(p) for p in pairs]
 
         candidates: Dict[str, ParamDelta] = {}
         recon_params: Dict[str, np.ndarray] = {}
@@ -724,38 +746,42 @@ class ArtifactStore:
         max_len = max(n for _, n in spans)
         batch = max(1, self.chunk_window_bytes // max(1, 4 * max_len))
         use_pool = (self.io_workers > 1 and batch > 1 and len(spans) > 1)
-        for lo in range(0, len(spans), batch):
-            idxs = list(range(lo, min(len(spans), lo + batch)))
-            if use_pool and len(idxs) > 1:
-                results = list(self._executor().map(process, idxs))
-            else:
-                results = [process(i) for i in idxs]
-            for idx, (tag, meta, payload, truth) in zip(idxs, results):
-                n = spans[idx][1]
-                hasher.update(truth)
-                if tag == "c":
-                    had = self.cas.has(meta)
-                    self.cas.put_bytes(payload, key=meta)
-                    items[idx] = {"c": meta, "n": n}
-                    with self._lock:
-                        self.io_stats["chunks_written"] += 1
-                        if had:
-                            self.io_stats["chunks_deduped"] += 1
-                        else:
-                            self.io_stats["chunk_bytes_written"] += n
-                elif tag == "b":
-                    bkey = self.cas.put_bytes(payload)
-                    qdtype, codname = meta
-                    items[idx] = {"b": bkey, "n": n, "q": qdtype}
-                    if codname != self.codec:
-                        items[idx]["k"] = codname
-                    with self._lock:
-                        self.io_stats["chunk_delta_blobs"] += 1
-                        self.io_stats["chunk_bytes_written"] += len(payload)
+        stream_span = span("commit.chunk_stream", cat="store", key=key,
+                           chunks=len(spans), batch=batch)
+        with stream_span:
+            for lo in range(0, len(spans), batch):
+                idxs = list(range(lo, min(len(spans), lo + batch)))
+                if use_pool and len(idxs) > 1:
+                    results = list(self._executor().map(propagate(process),
+                                                        idxs))
                 else:
-                    items[idx] = {"p": 1, "n": n}
-                    with self._lock:
-                        self.io_stats["chunk_passthrough"] += 1
+                    results = [process(i) for i in idxs]
+                for idx, (tag, meta, payload, truth) in zip(idxs, results):
+                    n = spans[idx][1]
+                    hasher.update(truth)
+                    if tag == "c":
+                        had = self.cas.has(meta)
+                        self.cas.put_bytes(payload, key=meta)
+                        items[idx] = {"c": meta, "n": n}
+                        with self._lock:
+                            self.io_stats["chunks_written"] += 1
+                            if had:
+                                self.io_stats["chunks_deduped"] += 1
+                            else:
+                                self.io_stats["chunk_bytes_written"] += n
+                    elif tag == "b":
+                        bkey = self.cas.put_bytes(payload)
+                        qdtype, codname = meta
+                        items[idx] = {"b": bkey, "n": n, "q": qdtype}
+                        if codname != self.codec:
+                            items[idx]["k"] = codname
+                        with self._lock:
+                            self.io_stats["chunk_delta_blobs"] += 1
+                            self.io_stats["chunk_bytes_written"] += len(payload)
+                    else:
+                        items[idx] = {"p": 1, "n": n}
+                        with self._lock:
+                            self.io_stats["chunk_passthrough"] += 1
 
         entry: Dict[str, Any] = {"kind": "chunked",
                                  "hash": hasher.hexdigest(),
@@ -1199,10 +1225,13 @@ class ArtifactStore:
             return cached
         e = self._entry(ref, key)
         if e["kind"] == "chunked":
-            value = self._materialize_chunked(ref, key)
+            with span("checkout.param", cat="store", key=key,
+                      kind="chunked"):
+                value = self._materialize_chunked(ref, key)
             self.cache.put((ref, key), value)
             return value
-        value, state = self._materialize_with_state(ref, key, plan=plan)
+        with span("checkout.param", cat="store", key=key):
+            value, state = self._materialize_with_state(ref, key, plan=plan)
         self.cache.put((ref, key), value)
         if state is not None:
             self.fold_cache.put((ref, key), state)
@@ -1232,27 +1261,28 @@ class ArtifactStore:
             else:
                 misses.append(k)
         if misses:
-            # prefetch the manifest chains serially (dict work, no decode):
-            # worker threads then walk fully-cached manifests
-            for k in misses:
-                for _ in self._walk_entries(ref, k):
-                    pass
-            workers = min(max_workers or self.io_workers, len(misses))
-            if workers > 1 and len(misses) > 1:
-                if max_workers is not None and max_workers != self.io_workers:
-                    # explicit sizing (CLI --jobs): a transient pool of the
-                    # requested width, not the store's shared default
-                    with ThreadPoolExecutor(max_workers=workers) as pool:
-                        mapped = list(pool.map(
-                            lambda k: self.materialize_param(ref, k), misses))
-                else:
-                    mapped = list(self._executor().map(
-                        lambda k: self.materialize_param(ref, k), misses))
-                for k, v in zip(misses, mapped):
-                    out[k] = v
-            else:
+            with span("store.checkout", cat="store", params=len(misses)):
+                # prefetch the manifest chains serially (dict work, no
+                # decode): worker threads then walk fully-cached manifests
                 for k in misses:
-                    out[k] = self.materialize_param(ref, k)
+                    for _ in self._walk_entries(ref, k):
+                        pass
+                workers = min(max_workers or self.io_workers, len(misses))
+                one = propagate(lambda k: self.materialize_param(ref, k))
+                if workers > 1 and len(misses) > 1:
+                    if (max_workers is not None
+                            and max_workers != self.io_workers):
+                        # explicit sizing (CLI --jobs): a transient pool of
+                        # the requested width, not the store's shared default
+                        with ThreadPoolExecutor(max_workers=workers) as pool:
+                            mapped = list(pool.map(one, misses))
+                    else:
+                        mapped = list(self._executor().map(one, misses))
+                    for k, v in zip(misses, mapped):
+                        out[k] = v
+                else:
+                    for k in misses:
+                        out[k] = one(k)
         return ModelArtifact(
             graph=LayerGraph.from_json(manifest["graph"]),
             params={k: out[k] for k in want},
@@ -1266,10 +1296,14 @@ class ArtifactStore:
             self.io_stats["bytes_materialized"] += int(
                 np.asarray(value).nbytes)
 
-    def reset_io_stats(self) -> None:
+    def reset_io_stats(self) -> Dict[str, float]:
+        # Registry-atomic reset: every key zeroes under ONE group lock, so
+        # a concurrent reader can never observe the half-reset view the
+        # old per-key mutation loop allowed. The store lock additionally
+        # serializes against in-flight `io_stats[k] += n` read-modify-write
+        # sequences (which hold it). Returns the pre-reset snapshot.
         with self._lock:
-            for k in self.io_stats:
-                self.io_stats[k] = 0
+            return self.io_stats.reset()
 
     # -- load --------------------------------------------------------------------
     def load_artifact(self, ref: str, lazy: bool = True) -> ModelArtifact:
@@ -1584,7 +1618,7 @@ class ArtifactStore:
             "cache_evictions": self.cache.evictions,
             "fold_cache_bytes": self.fold_cache.bytes_used,
             "fold_cache_entries": len(self.fold_cache),
-            **self.io_stats,
+            **self.io_stats.snapshot(),  # one lock: no torn multi-key view
             **self.cas.pack_stats(),
             **self.cas.stats,
         }
