@@ -1,0 +1,165 @@
+"""Continuous checkpointing overhead (DESIGN.md §15): commit at training speed.
+
+Trains the toy transformer with the step-delta commit engine at several
+cadences and measures wall-clock overhead vs the same loop with
+checkpointing disabled, plus bytes/step vs a naive full-snapshot baseline
+(state nbytes × commits). Exact tier = lossless xdelta chains (bit-identical
+resume); lossy tier = int8 error-feedback deltas with exact keyframes.
+
+``--smoke`` (the CI ``ckpt-smoke`` job) runs a reduced matrix and ASSERTS
+the §15 contract: every-10-step exact overhead under bound, exact-tier
+resume bit-identity, and lossy restore resolving to an exact keyframe.
+The full run writes the same rows into ``BENCH_PR9.json`` via
+``benchmarks/run.py`` where PRs diff the trajectory.
+
+Run directly: ``PYTHONPATH=src:. python -m benchmarks.bench_checkpoint``
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import tempfile
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+# heavier step than the unit-test toy: overhead percentages are relative,
+# so the step must do real compute for the ratio to mean anything
+CFG = ModelConfig(name="ckpt-bench", family="dense", n_layers=2, d_model=64,
+                  n_heads=2, n_kv_heads=2, d_ff=128, vocab_size=256,
+                  head_dim=32, dtype="float32", attn_chunk=64, remat="none")
+BATCH, SEQ = 8, 512
+WARMUP = 3
+
+# CI boxes are noisy and share cores; the local trajectory file records the
+# measured numbers, the smoke assertion uses the contract bound from the
+# issue (every-10-step exact < 10%) with headroom for scheduler jitter.
+SMOKE_EXACT10_BOUND_PCT = 10.0
+
+
+def _dir_bytes(root: str) -> int:
+    """Stored object bytes: loose objects + packfiles (not the indexes)."""
+    total = 0
+    for sub in ("objects", "packs"):
+        for dirpath, _, files in os.walk(os.path.join(root, sub)):
+            for f in files:
+                if f.endswith(".json"):
+                    continue
+                total += os.path.getsize(os.path.join(dirpath, f))
+    return total
+
+
+def _state_nbytes(state) -> int:
+    return sum(np.asarray(x).nbytes for x in jax.tree_util.tree_leaves(state))
+
+
+def _run(directory: Optional[str], steps: int, *, commit_every: int = 1,
+         lossy: bool = False):
+    """One measured training run; returns (seconds/step, trainer)."""
+    from repro.train import Trainer
+    tr = Trainer(CFG, batch=BATCH, seq=SEQ, checkpoint_dir=directory,
+                 seed=0, commit_every=commit_every, lossy_tier=lossy)
+    tr.run(WARMUP)
+    t0 = time.perf_counter()
+    tr.run(steps)
+    if tr.ckpt is not None:
+        tr.ckpt.wait()
+    dt = (time.perf_counter() - t0) / steps
+    return dt, tr
+
+
+def _config_row(tag: str, tier: str, cadence: int,
+                steps: int) -> Dict[str, Any]:
+    # adjacent baseline: wall-clock on a shared box drifts by more than the
+    # overheads being measured, so each row compares against a no-checkpoint
+    # run taken right next to it, not one global baseline
+    base_s, _ = _run(None, min(steps, 15))
+    with tempfile.TemporaryDirectory() as d:
+        dt, tr = _run(d, steps, commit_every=cadence, lossy=tier == "lossy")
+        n_commits = len(tr.ckpt._steps())
+        obj_bytes = _dir_bytes(d)
+        snap_bytes = _state_nbytes(tr.state)
+        row = {
+            "config": tag, "tier": tier, "commit_every": cadence,
+            "steps": steps, "step_s": round(dt, 5),
+            "base_step_s": round(base_s, 5),
+            "overhead_pct": round((dt - base_s) / base_s * 100, 2),
+            "commits": n_commits,
+            "bytes_per_step": int(obj_bytes / steps),
+            "bytes_per_commit": int(obj_bytes / max(n_commits, 1)),
+            "full_snapshot_bytes_per_commit": snap_bytes,
+            "bytes_vs_full_snapshot": round(
+                obj_bytes / max(n_commits, 1) / snap_bytes, 4),
+        }
+        _check_restore(tr, tier)
+        return row
+
+
+def _check_restore(tr, tier: str) -> None:
+    """Functional contract, asserted on every run (cheap next to the loop):
+    exact tier resumes bit-identical; lossy tier resolves to a verified
+    exact keyframe by default."""
+    ckpt = tr.ckpt
+    latest = ckpt.latest_step()
+    restored, step = ckpt.restore(template=tr.state, verify=True)
+    if tier == "exact":
+        assert step == latest
+        for a, b in zip(jax.tree_util.tree_leaves(tr.state),
+                        jax.tree_util.tree_leaves(restored)):
+            assert np.asarray(a).tobytes() == np.asarray(b).tobytes(), \
+                "exact-tier resume must be bit-identical"
+    else:
+        node = ckpt.lineage.nodes[ckpt._node_name(step)]
+        md = ckpt.store.get_manifest(node.artifact_ref).get("metadata") or {}
+        assert not md.get("lossy"), \
+            "default lossy restore must resolve to an exact keyframe"
+        # the lossy intermediates are reachable on request and finite
+        flat, s2 = ckpt.restore(step=latest, allow_lossy=True)
+        assert s2 == latest
+        assert all(np.isfinite(np.asarray(v, np.float64)).all()
+                   for v in flat.values())
+
+
+def main(smoke: bool = False) -> Dict[str, Any]:
+    rows = []
+    matrix = ([("exact@10", "exact", 10, 30), ("lossy@1", "lossy", 1, 12)]
+              if smoke else
+              [("exact@1", "exact", 1, 15),
+               ("exact@10", "exact", 10, 30),
+               ("exact@100", "exact", 100, 100),
+               ("lossy@1", "lossy", 1, 15),
+               ("lossy@10", "lossy", 10, 30)])
+    for tag, tier, cadence, n in matrix:
+        row = _config_row(tag, tier, cadence, n)
+        rows.append(row)
+        print(f"  {tag:10s} step={row['step_s']*1e3:7.1f}ms "
+              f"(base {row['base_step_s']*1e3:.1f}ms) "
+              f"overhead={row['overhead_pct']:6.2f}% "
+              f"bytes/step={row['bytes_per_step']:>9,} "
+              f"vs-full-snapshot={row['bytes_vs_full_snapshot']:.3f}x")
+    result = {"base_step_s": rows[0]["base_step_s"], "batch": BATCH,
+              "seq": SEQ, "state_bytes": None, "rows": rows}
+    exact10 = next(r for r in rows if r["config"] == "exact@10")
+    result["state_bytes"] = exact10["full_snapshot_bytes_per_commit"]
+    if smoke:
+        assert exact10["overhead_pct"] < SMOKE_EXACT10_BOUND_PCT, (
+            f"every-10-step exact overhead {exact10['overhead_pct']}% "
+            f"exceeds the §15 bound {SMOKE_EXACT10_BOUND_PCT}%")
+        print("ckpt-smoke OK: overhead bound, exact bit-identity, "
+              "lossy->keyframe restore")
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced matrix + contract assertions (CI)")
+    args = ap.parse_args()
+    out = main(smoke=args.smoke)
+    print(f"base step {out['base_step_s']*1e3:.1f}ms, "
+          f"state {out['state_bytes']:,} bytes")

@@ -6,7 +6,9 @@ trajectory CI and future PRs diff against: ``BENCH_PR4.json`` (commit
 throughput, warm/cold checkout latency, dedup ratio) and
 ``BENCH_PR6.json`` (chunk-level dedup, streaming RSS, ranged pull) and
 ``BENCH_PR7.json`` (serving resident density, hot-swap latency) and
-``BENCH_PR8.json`` (observability overhead: disabled-path commit cost).
+``BENCH_PR8.json`` (observability overhead: disabled-path commit cost) and
+``BENCH_PR9.json`` (continuous checkpointing: overhead per cadence/tier,
+bytes/step vs full snapshots).
 Usage: PYTHONPATH=src python -m benchmarks.run
 """
 
@@ -235,6 +237,21 @@ def main() -> None:
     rows = bench_kernels.main()
     _csv("kernels", rows[0]["cpu_s"] * 1e6,
          f"tpu_bound_us={rows[0]['tpu_roofline_s']*1e6:.1f}")
+
+    print("=" * 72)
+    print("§15 continuous checkpointing — commit at training speed")
+    print("=" * 72)
+    from benchmarks import bench_checkpoint
+    ck = bench_checkpoint.main()
+    e10 = next(r for r in ck["rows"] if r["config"] == "exact@10")
+    l1 = next(r for r in ck["rows"] if r["config"] == "lossy@1")
+    _csv("ckpt_overhead", ck["base_step_s"] * 1e6,
+         f"exact10_pct={e10['overhead_pct']:.2f},"
+         f"lossy1_pct={l1['overhead_pct']:.2f},"
+         f"exact10_bytes_ratio={e10['bytes_vs_full_snapshot']:.3f}")
+    with open("BENCH_PR9.json", "w") as f:
+        json.dump(ck, f, indent=1)
+    print("wrote BENCH_PR9.json")
 
     print("=" * 72)
     print("Roofline (from dry-run artifact, single-pod) — see EXPERIMENTS.md")

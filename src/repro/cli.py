@@ -278,6 +278,27 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--backend", default=None,
                    help="kernel backend for delta application (default: "
                         "host fold on CPU, fused chain_apply on device)")
+    p = sub.add_parser("train",
+                       help="toy training run with continuous checkpointing "
+                            "(DESIGN.md §15): every commit is an MGit "
+                            "version node in -C repo")
+    p.add_argument("--steps", type=int, default=20,
+                   help="number of training steps to run")
+    p.add_argument("--commit-every", type=int, default=1, metavar="N",
+                   help="commit a checkpoint version every N steps "
+                        "(the continuous-checkpointing cadence)")
+    p.add_argument("--lossy-tier", action="store_true",
+                   help="int8 error-feedback deltas with periodic exact "
+                        "keyframes instead of lossless step deltas")
+    p.add_argument("--keyframe-every", type=int, default=8, metavar="K",
+                   help="lossy tier: every K-th commit is an exact keyframe")
+    p.add_argument("--d-model", type=int, default=32,
+                   help="toy model width")
+    p.add_argument("--n-layers", type=int, default=2,
+                   help="toy model depth")
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--seq", type=int, default=16)
+    p.add_argument("--seed", type=int, default=0)
     return ap
 
 
@@ -297,6 +318,8 @@ def main(argv=None) -> int:
         return _cmd_hub(args)
     if args.cmd == "serve":
         return _cmd_serve(args)
+    if args.cmd == "train":
+        return _cmd_train(args)
     if args.cmd == "clone":  # dest is the repo; don't touch args.repo
         from repro import remote as rm
         report = rm.clone(args.url, args.dest, filter=args.filter)
@@ -556,6 +579,35 @@ def _cmd_serve(args) -> int:
     finally:
         watcher.stop()
         server.server_close()
+    return 0
+
+
+def _cmd_train(args) -> int:
+    """`train`: toy loop exercising the continuous-checkpointing path."""
+    from repro.models.config import ModelConfig
+    from repro.store.checkpoint import CKPT_STATS
+    from repro.train import Trainer
+    cfg = ModelConfig(name="cli-train", family="dense",
+                      n_layers=args.n_layers, d_model=args.d_model,
+                      n_heads=2, n_kv_heads=2, d_ff=args.d_model * 2,
+                      vocab_size=64, head_dim=args.d_model // 2,
+                      dtype="float32", attn_chunk=16, remat="none")
+    trainer = Trainer(cfg, batch=args.batch, seq=args.seq,
+                      checkpoint_dir=args.repo, seed=args.seed,
+                      commit_every=args.commit_every,
+                      lossy_tier=args.lossy_tier,
+                      keyframe_every=args.keyframe_every)
+    history = trainer.run(args.steps)
+    ckpt = trainer.ckpt
+    ckpt.close()
+    print(json.dumps({
+        "steps": args.steps, "start_step": trainer.start_step,
+        "final_loss": history["loss"][-1] if history["loss"] else None,
+        "tier": ckpt.tier, "commit_every": trainer.checkpoint_every,
+        "latest_step": ckpt.latest_step(),
+        "ckpt": {k: int(CKPT_STATS[k]) for k in
+                 ("saves", "commits", "coalesced", "leaves_skipped")},
+    }, indent=1))
     return 0
 
 

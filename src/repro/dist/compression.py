@@ -52,3 +52,16 @@ def compressed_bytes(grads: Any) -> int:
     per tensor."""
     leaves = jax.tree_util.tree_leaves(grads)
     return sum(int(np.prod(np.shape(l))) for l in leaves) + 4 * len(leaves)
+
+
+def ef_eps(amax: float) -> float:
+    """Checkpoint-tier bridge to this module's int8 estimator (§15).
+
+    The lossy step-delta commit sizes its per-leaf quantization grid to
+    match what one error-feedback round would use for the same update:
+    ``quant_scale(eps) == amax / _Q_LEVELS`` (``quant_scale`` is
+    ``2*log1p(eps)``, so eps inverts through expm1). With the grid matched,
+    every quantized step-delta narrows to int8 and its per-hop error is
+    bounded by half the EF grid — the checkpoint never loses more than the
+    wire compression already tolerates."""
+    return max(float(np.expm1((amax / _Q_LEVELS) / 2.0)), 1e-12)

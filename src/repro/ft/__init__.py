@@ -1,3 +1,5 @@
-from repro.ft.straggler import StepTimer, StragglerEvent, StragglerPolicy, Watchdog
+from repro.ft.straggler import (ElasticRestart, StepTimer, StragglerEvent,
+                                StragglerPolicy, Watchdog)
 
-__all__ = ["StepTimer", "StragglerEvent", "StragglerPolicy", "Watchdog"]
+__all__ = ["ElasticRestart", "StepTimer", "StragglerEvent", "StragglerPolicy",
+           "Watchdog"]

@@ -88,6 +88,50 @@ class StragglerPolicy:
         return action
 
 
+class ElasticRestart:
+    """Evict-stage policy action: resume the trainer from its lineage.
+
+    Wired as :class:`StragglerPolicy`'s ``evict_fn``, this closes the
+    evict -> elastic-restart loop described in the module docstring: when a
+    host is slow enough to evict, the surviving workers re-lay the last
+    committed MGit checkpoint out on the current mesh and continue from
+    there. With continuous checkpointing (DESIGN.md §15) the rollback
+    window is the commit cadence — steps, not epochs — and the exact tier
+    makes the resumed state bit-identical to what was committed.
+
+    ``trainer`` is duck-typed: it needs ``.ckpt`` (a CheckpointManager or
+    None), ``.state``, ``.mesh``, ``.pipeline`` and ``.start_step``."""
+
+    def __init__(self, trainer) -> None:
+        self.trainer = trainer
+        self.restarts: List[Dict[str, int]] = []
+
+    def __call__(self, event: StragglerEvent) -> None:
+        tr = self.trainer
+        ckpt = getattr(tr, "ckpt", None)
+        if ckpt is None:
+            return
+        ckpt.wait()  # drain in-flight commits; surface async failures
+        if ckpt.latest_step() is None:
+            return  # nothing committed yet: keep the live state
+        if tr.mesh is not None:
+            import jax
+
+            def tmpl(x):
+                return jax.ShapeDtypeStruct(
+                    x.shape, x.dtype, sharding=getattr(x, "sharding", None))
+
+            template = jax.tree_util.tree_map(tmpl, tr.state)
+            state, step = ckpt.restore_sharded(template)
+        else:
+            state, step = ckpt.restore(template=tr.state)
+        tr.state = state
+        tr.pipeline.step = step
+        tr.start_step = step
+        self.restarts.append({"event_step": event.step,
+                              "restored_step": step})
+
+
 class Watchdog:
     """File-based heartbeats: each host touches its file; stale peers flagged."""
 

@@ -53,6 +53,22 @@ def init(params) -> OptState:
                     count=jnp.zeros((), jnp.int32))
 
 
+def state_regime(key: str) -> str:
+    """Storage regime of one flattened train-state leaf (DESIGN.md §15).
+
+    The step-delta checkpoint engine picks codecs per optimizer regime:
+    ``moment2`` (AdamW nu — smooth, nonnegative, slowly varying in *relative*
+    terms) is stored in the log domain so uniform quantization gives relative
+    precision; ``moment1`` (mu) and ``params`` take the standard sparse-
+    delta path. Keys follow ``flatten_state``'s layout: ``opt/mu/...``,
+    ``opt/nu/...``, ``params/...``."""
+    if key.startswith("opt/nu/"):
+        return "moment2"
+    if key.startswith("opt/mu/"):
+        return "moment1"
+    return "params"
+
+
 def global_norm(tree) -> jnp.ndarray:
     leaves = jax.tree_util.tree_leaves(tree)
     return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))

@@ -61,7 +61,8 @@ from repro.core.graphir import LayerGraph
 from repro.obs import REGISTRY, propagate, span
 from repro.store import chunks as chunklib
 from repro.store.cas import CAS, DEFAULT_PACK_THRESHOLD
-from repro.store.codecs import get_codec, pick_codec
+from repro.store.codecs import (bitpattern_apply, bitpattern_delta,
+                                get_codec, pick_codec)
 from repro.store.delta import (CompressResult, ParamDelta, decode_q,
                                decompress_param, delta_compression,
                                host_dequant, host_snapshot,
@@ -305,7 +306,9 @@ class ArtifactStore:
                   "chain_hops", "plans_resolved", "dequant_calls",
                   "hops_folded", "fold_hits", "chunks_written",
                   "chunk_bytes_written", "chunks_deduped",
-                  "chunk_delta_blobs", "chunk_passthrough", "chunks_read"),
+                  "chunk_delta_blobs", "chunk_passthrough", "chunks_read",
+                  "step_commits", "step_leaves_copied", "step_leaves_delta",
+                  "step_leaves_xdelta", "step_leaves_full"),
             help="ArtifactStore I/O accounting")
         self._lock = threading.RLock()   # manifests dict + counters
         self._stats_path = (os.path.join(root, "store_stats.json")
@@ -578,7 +581,8 @@ class ArtifactStore:
 
     def _commit_truth(self, parent_ref: str, parent_key: str,
                       parent_value: np.ndarray, q32: np.ndarray,
-                      dtype: str) -> Tuple[np.ndarray, Optional[FoldState]]:
+                      dtype: str, eps: Optional[float] = None
+                      ) -> Tuple[np.ndarray, Optional[FoldState]]:
         """The child's canonical stored value for a new delta hop, plus its
         resulting open-segment fold state.
 
@@ -586,15 +590,21 @@ class ArtifactStore:
         EXACTLY what checkout computes for the same chain (§10.2) — else
         opens a new segment from the parent's value. Device-backend stores
         dequant through the same jit'd kernel checkout uses, so stored
-        hashes always match what a later checkout reproduces."""
+        hashes always match what a later checkout reproduces. ``eps``
+        defaults to the store's configured eps; the step-delta engine
+        passes its per-leaf adaptive eps (§15) so segment-extension
+        decisions here stay structurally identical to checkout's
+        ``_is_segment_boundary``."""
+        if eps is None:
+            eps = self.eps
         if self.backend in (None, "ref"):
             dequant = host_dequant
         else:
             from repro.kernels import ops
 
-            def dequant(v, q, eps, out_dtype="float32"):
+            def dequant(v, q, e_, out_dtype="float32"):
                 return np.asarray(ops.dequant_apply(
-                    np.asarray(v), q, eps=eps, backend=self.backend,
+                    np.asarray(v), q, eps=e_, backend=self.backend,
                     out_dtype=out_dtype))
 
         if dtype == "float32" and self.fold_enabled:
@@ -604,17 +614,279 @@ class ArtifactStore:
                 if e["kind"] == "delta":  # state evicted: recompute it
                     _, fs = self._materialize_with_state(parent_ref,
                                                          parent_key)
-            if fs is not None and fs.eps == self.eps:
+            if fs is not None and fs.eps == eps:
                 state = FoldState(
                     seg_base=fs.seg_base,
                     q_open=np.add(fs.q_open, q32.reshape(fs.q_open.shape),
                                   dtype=np.int32),
-                    eps=self.eps)
+                    eps=eps)
             else:
                 state = FoldState(seg_base=np.asarray(parent_value),
-                                  q_open=q32, eps=self.eps)
-            return dequant(state.seg_base, state.q_open, self.eps), state
-        return dequant(parent_value, q32, self.eps, out_dtype=dtype), None
+                                  q_open=q32, eps=eps)
+            return dequant(state.seg_base, state.q_open, eps), state
+        return dequant(parent_value, q32, eps, out_dtype=dtype), None
+
+    # -- step-delta commit engine (DESIGN.md §15) --------------------------------
+    def _full_step_entry(self, key: str, value: np.ndarray,
+                         parent_ref: Optional[str],
+                         parent_manifest: Optional[Dict[str, Any]],
+                         lossless: bool = True) -> Dict[str, Any]:
+        """Depth-0 entry for one step leaf: chunked above the threshold
+        (grid inheritance still dedups unchanged chunks; per-chunk
+        quantized deltas only in the lossy tier), else a raw full tensor."""
+        if self.chunk_threshold and value.nbytes >= self.chunk_threshold:
+            e = self._commit_chunked(key, chunklib.as_source(value),
+                                     parent_ref, parent_manifest,
+                                     lossless=lossless)
+            if e.get("parent_ref"):
+                e["d"] = int(parent_manifest.get("depth", 0)) + 1
+            return e
+        thash = tensor_hash(value)
+        self.cas.put_tensor(value, key=thash)
+        return {"kind": "full", "tensor": thash, "shape": list(value.shape),
+                "dtype": str(value.dtype), "hash": thash}
+
+    @staticmethod
+    def _copy_step_entry(pe: Dict[str, Any], parent_depth: int,
+                         copy_objs: List[str]) -> Dict[str, Any]:
+        """Verbatim re-reference of the parent's entry for an unchanged
+        leaf. The new manifest holds its OWN reference on every object the
+        entry owns (mirroring commit-time accounting), so ``copy_objs``
+        collects them for one batched incref."""
+        e = dict(pe)
+        kind = e["kind"]
+        if kind == "chunked":
+            for item in e["chunks"]:
+                k = item.get("c") or item.get("b")
+                if k:
+                    copy_objs.append(k)
+        else:
+            copy_objs.append(e["tensor"] if kind == "full" else e["blob"])
+        if kind != "full" and "d" not in e:
+            e["d"] = (parent_depth if (kind in ("delta", "xdelta")
+                                       or e.get("parent_ref")) else 0)
+        return e
+
+    @staticmethod
+    def _entry_nbytes(pe: Dict[str, Any]) -> int:
+        if pe["kind"] == "chunked":
+            return int(pe["nbytes"])
+        shape = pe.get("shape", ())
+        n = int(np.prod(shape, dtype=np.int64)) if shape else 1
+        return n * np.dtype(pe.get("dtype", "float32")).itemsize
+
+    def commit_step(self, name: str,
+                    flat: Dict[str, Optional[np.ndarray]],
+                    parent_ref: Optional[str] = None, *,
+                    skip: frozenset = frozenset(),
+                    tier: str = "exact",
+                    model_type: str = "model",
+                    metadata: Optional[Dict[str, Any]] = None,
+                    graph_json: Optional[str] = None,
+                    parent_hint: Optional[Dict[str, np.ndarray]] = None,
+                    step_codec: str = "zlib",
+                    flush: bool = True) -> str:
+        """Training-speed commit of one step's state (DESIGN.md §15).
+
+        ``flat`` maps leaf key -> host array; keys in ``skip`` (fingerprint-
+        unchanged since ``parent_ref``) may carry ``None`` and re-reference
+        the parent's entry verbatim — no host transfer, no encode, no new
+        object. Changed leaves store as:
+
+        * ``tier="exact"``: an ``xdelta`` entry — lossless bitpattern
+          subtraction vs the parent's committed truth, byte-plane + zlib-1
+          encoded. The child's stored truth IS the live value, so resume is
+          bit-identical.
+        * ``tier="lossy"``: an int8 ``delta`` entry with per-leaf adaptive
+          eps sized so the quantization grid matches the error-feedback
+          estimator's (``amax/127``, ``repro.dist.compression``). Deltas
+          are taken against the parent's *committed* truth, so quantization
+          error never compounds along the chain (implicit error feedback:
+          each hop's error is bounded by half its own grid).
+
+        ``parent_hint`` (exact tier only) supplies the parent's committed
+        values without a cache probe — the caller's previous live flat is
+        exactly that, because exact-tier truth is the live value. Per-leaf
+        chain depth (entry field ``d``) is gated by ``max_chain_depth``;
+        overlong chains reset to full/chunked entries. A leaf whose bits
+        did not change (but was transferred anyway) also degenerates to a
+        verbatim copy."""
+        if tier not in ("exact", "lossy"):
+            raise ValueError(f"unknown commit tier {tier!r}")
+        parent_manifest = (self.get_manifest(parent_ref)
+                          if parent_ref is not None else None)
+        if parent_manifest is None:
+            skip = frozenset()
+        parent_depth = (int(parent_manifest.get("depth", 0))
+                        if parent_manifest else 0)
+        if graph_json is None:
+            if (parent_manifest is not None
+                    and set(flat) == set(parent_manifest["params"])):
+                graph_json = parent_manifest["graph"]
+            else:
+                raise ValueError(
+                    "commit_step needs graph_json when the leaf set differs "
+                    "from the parent manifest's")
+        cod_q = get_codec(step_codec, 1)  # level 1: hot-path default
+        xd = get_codec("xd")
+        entries: Dict[str, Any] = {}
+        truths: Dict[str, np.ndarray] = {}
+        states: Dict[str, FoldState] = {}
+        copy_objs: List[str] = []
+        counts = {"copied": 0, "delta": 0, "xdelta": 0, "full": 0}
+        logical = 0
+
+        with span("ckpt.delta", cat="ckpt", model=name, params=len(flat),
+                  skipped=len(skip)), self.cas.batch():
+            for key, value in flat.items():
+                pe = (parent_manifest["params"].get(key)
+                      if parent_manifest else None)
+                if key in skip and pe is not None:
+                    entries[key] = self._copy_step_entry(pe, parent_depth,
+                                                         copy_objs)
+                    counts["copied"] += 1
+                    logical += self._entry_nbytes(pe)
+                    continue
+                if value is None:
+                    raise ValueError(f"leaf {key!r} not in skip but has no "
+                                     f"value")
+                value = np.ascontiguousarray(value)
+                logical += int(value.nbytes)
+                pd = None
+                if (self.delta_enabled and pe is not None
+                        and pe["kind"] != "chunked"
+                        and tuple(pe.get("shape", ())) == value.shape
+                        and pe.get("dtype") == str(value.dtype)):
+                    pd = int(pe.get("d", parent_depth))
+                    if pd + 1 > self.max_chain_depth:
+                        pd = None  # per-leaf chain reset
+                if pd is None:
+                    entries[key] = self._full_step_entry(
+                        key, value, parent_ref, parent_manifest,
+                        lossless=tier != "lossy")
+                    counts["full"] += 1
+                    continue
+                pv = None
+                if parent_hint is not None:
+                    pv = parent_hint.get(key)
+                if pv is None:
+                    pv = self.cache.get((parent_ref, key))
+                if pv is None:
+                    pv = self.materialize_param(parent_ref, key)
+                pv = np.asarray(pv)
+                if pv.shape != value.shape or pv.dtype != value.dtype:
+                    entries[key] = self._full_step_entry(
+                        key, value, parent_ref, parent_manifest,
+                        lossless=tier != "lossy")
+                    counts["full"] += 1
+                    continue
+                if tier == "lossy" and value.dtype == np.float32:
+                    diff = np.subtract(pv, value, dtype=np.float32)
+                    amax = (float(np.max(np.abs(diff)))
+                            if diff.size else 0.0)
+                    if amax == 0.0:  # bit-identical to parent truth
+                        entries[key] = self._copy_step_entry(
+                            pe, parent_depth, copy_objs)
+                        counts["copied"] += 1
+                        continue
+                    # grid matched to the EF estimator: quant_scale(eps)
+                    # == amax/_Q_LEVELS, so q always narrows to int8
+                    from repro.dist.compression import ef_eps
+                    eps = ef_eps(amax)
+                    q, nz, _narrow = host_snapshot(pv, value, eps)
+                    q32 = (q if q.dtype == np.int32
+                           else q.astype(np.int32))
+                    truth, state = self._commit_truth(
+                        parent_ref, key, pv, q32, "float32", eps=eps)
+                    truth = np.asarray(truth).reshape(value.shape)
+                    ccod = pick_codec(int(nz), q.size, cod_q)
+                    blob = ccod.encode(q)
+                    if len(blob) >= value.nbytes:
+                        entries[key] = self._full_step_entry(
+                            key, value, parent_ref, parent_manifest)
+                        counts["full"] += 1
+                        continue
+                    entries[key] = {
+                        "kind": "delta", "blob": self.cas.put_bytes(blob),
+                        "parent_ref": parent_ref, "parent_key": key,
+                        "codec": ccod.name, "eps": eps,
+                        "shape": list(value.shape), "dtype": "float32",
+                        "qdtype": str(q.dtype),
+                        "hash": tensor_hash(truth), "d": pd + 1}
+                    truths[key] = truth
+                    if state is not None:
+                        states[key] = state
+                    counts["delta"] += 1
+                else:
+                    d = bitpattern_delta(value, pv)
+                    if not d.any():  # same bits: re-reference, store nothing
+                        entries[key] = self._copy_step_entry(
+                            pe, parent_depth, copy_objs)
+                        counts["copied"] += 1
+                        continue
+                    blob = xd.encode(d)
+                    if len(blob) >= value.nbytes:
+                        entries[key] = self._full_step_entry(
+                            key, value, parent_ref, parent_manifest)
+                        counts["full"] += 1
+                        continue
+                    entries[key] = {
+                        "kind": "xdelta", "blob": self.cas.put_bytes(blob),
+                        "parent_ref": parent_ref, "parent_key": key,
+                        "codec": "xd", "shape": list(value.shape),
+                        "dtype": str(value.dtype), "qdtype": str(d.dtype),
+                        "hash": tensor_hash(value), "d": pd + 1}
+                    truths[key] = value
+                    counts["xdelta"] += 1
+
+            delta_parents = sorted({e["parent_ref"]
+                                    for e in entries.values()
+                                    if e.get("parent_ref")})
+            with self.cas.batched_refcounts():
+                for obj in copy_objs:
+                    self.cas.incref(obj)
+                for pref in delta_parents:
+                    self.cas.incref(pref)
+            depth = max((int(e.get("d", 0)) for e in entries.values()),
+                        default=0)
+            manifest = {
+                "name": name,
+                "model_type": model_type,
+                "metadata": metadata or {},
+                "graph": graph_json,
+                "params": entries,
+                "depth": depth,
+                "delta_parents": delta_parents,
+            }
+            payload = json.dumps(manifest, sort_keys=True,
+                                 default=str).encode()
+            ref = self.cas.put_bytes(payload, key="m_" + bytes_hash(payload))
+
+        with self._lock:
+            self._manifests[ref] = manifest
+            self.logical_bytes += logical
+            self.io_stats["step_commits"] += 1
+            self.io_stats["step_leaves_copied"] += counts["copied"]
+            self.io_stats["step_leaves_delta"] += counts["delta"]
+            self.io_stats["step_leaves_xdelta"] += counts["xdelta"]
+            self.io_stats["step_leaves_full"] += counts["full"]
+        self._persist_stats()
+        # seed this commit's truth so the NEXT step's parent lookups (and
+        # any checkout of this ref) are pure cache hits
+        for k, v in truths.items():
+            self.cache.put((ref, k), np.asarray(v))
+        for k, st in states.items():
+            self.fold_cache.put((ref, k), st)
+        if parent_ref is not None:
+            for k in skip:
+                if k in entries:
+                    v = self.cache.get((parent_ref, k))
+                    if v is not None:
+                        self.cache.put((ref, k), v)
+        if flush:
+            with span("commit.pack_fsync", cat="store"):
+                self.cas.flush()  # commit point: index + refcounts durable
+        return ref
 
     # -- chunk engine (DESIGN.md §12) --------------------------------------------
     def _chunk_candidates(self, artifact: ModelArtifact
@@ -672,8 +944,8 @@ class ArtifactStore:
         return pe
 
     def _commit_chunked(self, key: str, source, parent_ref: Optional[str],
-                        parent_manifest: Optional[Dict[str, Any]]
-                        ) -> Dict[str, Any]:
+                        parent_manifest: Optional[Dict[str, Any]],
+                        lossless: bool = False) -> Dict[str, Any]:
         """Stream one large param into chunk objects; return its entry.
 
         The tensor is processed through a bounded window: chunks are read,
@@ -690,7 +962,12 @@ class ArtifactStore:
         quantized per-chunk delta blob, (c) a pass-through marker (``p``:
         bit-identical to the parent chunk's truth), or (d) a fresh raw
         ``c_`` object. Without an inheritable grid, content-defined (or
-        fixed) boundaries are computed and every chunk stores raw."""
+        fixed) boundaries are computed and every chunk stores raw.
+
+        ``lossless`` (the exact checkpoint tier, DESIGN.md §15) disables
+        the quantized per-chunk delta path: the inherited grid still
+        dedups unchanged chunks by content key, but changed chunks store
+        raw bytes so the entry's truth IS the live value bit-for-bit."""
         dtype = np.dtype(source.dtype)
         shape = tuple(int(d) for d in source.shape)
         nbytes = int(source.nbytes)
@@ -699,7 +976,8 @@ class ArtifactStore:
         parent_chain = None
         if pe is not None:
             cuts = np.cumsum([int(it["n"]) for it in pe["chunks"]]).tolist()
-            parent_chain = self._chunk_chain(parent_ref, key)
+            if not lossless:
+                parent_chain = self._chunk_chain(parent_ref, key)
         else:
             cuts = chunklib.cut_points(
                 source.read, nbytes, dtype.itemsize,
@@ -992,9 +1270,9 @@ class ArtifactStore:
         visited set — NOT this store's max_chain_depth: the store may have
         been reopened with a smaller depth knob than the one the chain was
         written with, and that is valid data. Ends after the first
-        non-``delta`` entry (``full``, or a ``chunked`` chain base — chunked
-        entries resolve through the chunk engine, not this walk); callers
-        early-exit by breaking."""
+        non-``delta`` entry (``full``, a ``chunked`` chain base, or an
+        ``xdelta`` hop — those resolve through their own engines, not this
+        walk); callers early-exit by breaking."""
         cur_ref, cur_key = ref, key
         seen = set()
         while True:
@@ -1025,9 +1303,10 @@ class ArtifactStore:
             if e["kind"] == "full":
                 return ReconstructionPlan("full", e["tensor"],
                                           tuple(reversed(hops)))
-            if e["kind"] == "chunked":
-                # chunked chain base: materialized by the chunk engine, so
-                # downstream it behaves like an already-cached value
+            if e["kind"] in ("chunked", "xdelta"):
+                # chain base owned by another engine (chunk decode or the
+                # lossless bitpattern apply): downstream it behaves like an
+                # already-cached value
                 return ReconstructionPlan("chunked", (cur_ref, cur_key),
                                           tuple(reversed(hops)))
             hops.append(self._hop_of(e, cur_ref, cur_key))
@@ -1077,9 +1356,9 @@ class ArtifactStore:
             self.io_stats["plans_resolved"] += 1
         pending: List[DeltaHop] = []
         for cur_ref, cur_key, e in self._walk_entries(ref, key):
-            if e["kind"] == "chunked":
-                # chunk-engine base for a delta chain built on top of a
-                # chunked param: materialize it (cached) as a value origin
+            if e["kind"] in ("chunked", "xdelta"):
+                # chunk-engine or xdelta base for a delta chain built on
+                # top of it: materialize it (cached) as a value origin
                 v = self.cache.get((cur_ref, cur_key))
                 if v is None:
                     v = self.materialize_param(cur_ref, cur_key)
@@ -1212,6 +1491,28 @@ class ArtifactStore:
             value = np.asarray(value).reshape(hops[-1].shape)
         return value, state
 
+    def _materialize_xdelta(self, ref: str, key: str,
+                            e: Dict[str, Any]) -> np.ndarray:
+        """Apply one lossless bitpattern hop: parent truth + stored delta.
+
+        The recursive parent materialization handles mixed chains (xdelta
+        over delta over full, etc.) and is bounded by the per-leaf chain
+        depth gate at commit time."""
+        parent = self.materialize_param(e["parent_ref"], e["parent_key"])
+        n = int(np.prod(e["shape"], dtype=np.int64)) if e["shape"] else 1
+        qdt = np.dtype(e.get("qdtype", "uint32"))
+        # element count of the stored delta, not of the tensor: dtypes
+        # whose itemsize has no native unsigned width (complex, …) delta
+        # over a byte-wise view, so the blob holds nbytes uint8 elements
+        n = n * np.dtype(e["dtype"]).itemsize // qdt.itemsize
+        d = get_codec(e["codec"]).decode(
+            self.cas.get_view(e["blob"]), n, dtype=str(qdt))
+        value = bitpattern_apply(parent, d, e["dtype"], tuple(e["shape"]))
+        with self._lock:
+            self.io_stats["chain_hops"] += 1
+        self._count_materialization(value)
+        return value
+
     def materialize_param(self, ref: str, key: str,
                           plan: Optional[ReconstructionPlan] = None
                           ) -> np.ndarray:
@@ -1228,6 +1529,12 @@ class ArtifactStore:
             with span("checkout.param", cat="store", key=key,
                       kind="chunked"):
                 value = self._materialize_chunked(ref, key)
+            self.cache.put((ref, key), value)
+            return value
+        if e["kind"] == "xdelta":
+            with span("checkout.param", cat="store", key=key,
+                      kind="xdelta"):
+                value = self._materialize_xdelta(ref, key, e)
             self.cache.put((ref, key), value)
             return value
         with span("checkout.param", cat="store", key=key):
@@ -1354,6 +1661,10 @@ class ArtifactStore:
                 continue
             if e["kind"] == "chunked":
                 params[key] = self._materialize_chunked(ref, key)
+                states[key] = None
+                continue
+            if e["kind"] == "xdelta":
+                params[key] = self._materialize_xdelta(ref, key, e)
                 states[key] = None
                 continue
             pref = e["parent_ref"]

@@ -125,6 +125,69 @@ class SparseCodec(Codec):
         return out
 
 
+class BytePlaneCodec(Codec):
+    """Byte-plane shuffle + zlib for *lossless* bitpattern deltas (§15).
+
+    The step-delta engine stores exact-tier hops as the elementwise
+    difference of the raw bit patterns (mod 2^width, see
+    :func:`bitpattern_delta`). Between consecutive optimizer steps most
+    elements change only in their low-order mantissa bytes, so grouping
+    byte position k of every element into one contiguous plane puts the
+    all-zero sign/exponent planes next to each other and lets a cheap
+    zlib level-1 pass erase them. Level 1 keeps the encode on the training
+    hot path (~step time budget); the container is self-describing so
+    readers don't care."""
+
+    name = "xd"
+
+    def __init__(self, level: int = 1) -> None:
+        self.level = level
+
+    def encode(self, arr: np.ndarray) -> bytes:
+        a = np.ascontiguousarray(arr)
+        item = a.dtype.itemsize
+        planes = a.view(np.uint8).reshape(-1, item).T
+        return zlib.compress(np.ascontiguousarray(planes).tobytes(), self.level)
+
+    def decode(self, data: bytes, n: int, dtype: str = "uint32") -> np.ndarray:
+        dt = np.dtype(dtype)
+        planes = np.frombuffer(zlib.decompress(data), dtype=np.uint8)
+        planes = planes.reshape(dt.itemsize, n)
+        return np.ascontiguousarray(planes.T).reshape(-1).view(dt)
+
+
+def _bitwidth_dtype(itemsize: int) -> np.dtype:
+    return {8: np.dtype(np.uint64), 4: np.dtype(np.uint32),
+            2: np.dtype(np.uint16)}.get(itemsize, np.dtype(np.uint8))
+
+
+def bitpattern_delta(child: np.ndarray, parent: np.ndarray) -> np.ndarray:
+    """Lossless delta: raw-bits subtraction mod 2^width, elementwise.
+
+    Works for any dtype (floats are viewed as unsigned ints of the same
+    width; odd itemsizes fall back to a byte-wise view). The inverse is
+    :func:`bitpattern_apply`; ``child == apply(parent, delta)`` holds
+    bit-for-bit, which is what makes the exact checkpoint tier resumable
+    with no drift."""
+    c = np.ascontiguousarray(child)
+    p = np.ascontiguousarray(parent)
+    ud = _bitwidth_dtype(c.dtype.itemsize)
+    cv = c.view(ud).ravel() if ud.itemsize == c.dtype.itemsize else c.view(np.uint8).ravel()
+    pv = p.view(ud).ravel() if ud.itemsize == p.dtype.itemsize else p.view(np.uint8).ravel()
+    return cv - pv  # unsigned wraparound is the point
+
+
+def bitpattern_apply(parent: np.ndarray, delta: np.ndarray,
+                     dtype: str, shape) -> np.ndarray:
+    """Inverse of :func:`bitpattern_delta`: reconstruct the child exactly."""
+    dt = np.dtype(dtype)
+    p = np.ascontiguousarray(parent)
+    ud = delta.dtype
+    pv = p.view(ud).ravel() if ud.itemsize == dt.itemsize else p.view(np.uint8).ravel()
+    child = (pv + delta).view(np.uint8).reshape(-1)
+    return child.view(dt).reshape(shape)
+
+
 CODECS: Dict[str, Codec] = {
     "raw": RawCodec(),
     "rle": RLECodec(),
@@ -132,6 +195,7 @@ CODECS: Dict[str, Codec] = {
     "lzma6": LZMACodec(preset=6),
     "zlib": ZlibCodec(),
     "sparse": SparseCodec(),
+    "xd": BytePlaneCodec(),
 }
 
 #: nonzero density below which ``sparse`` reliably beats the run-based

@@ -48,7 +48,7 @@ def parse_manifest(data: bytes) -> ManifestInfo:
                 parents_set.add(e["parent_ref"])
         else:
             objects.append(e["tensor"] if kind == "full" else e["blob"])
-            if kind == "delta":
+            if kind in ("delta", "xdelta"):
                 parents_set.add(e["parent_ref"])
     return ManifestInfo(objects=objects, parents=sorted(parents_set),
                         depth=int(manifest.get("depth", 0)))

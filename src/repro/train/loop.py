@@ -15,7 +15,7 @@ import jax
 import numpy as np
 
 from repro.data import SyntheticPipeline
-from repro.ft import StepTimer, StragglerPolicy
+from repro.ft import ElasticRestart, StepTimer, StragglerPolicy
 from repro.models.config import ModelConfig
 from repro.optim import adamw
 from repro.store.checkpoint import CheckpointManager
@@ -29,10 +29,15 @@ class Trainer:
                  checkpoint_dir: Optional[str] = None,
                  checkpoint_every: int = 50, mesh: Optional[Any] = None,
                  seed: int = 0,
-                 on_metrics: Optional[Callable[[int, Dict], None]] = None):
+                 on_metrics: Optional[Callable[[int, Dict], None]] = None,
+                 commit_every: Optional[int] = None,
+                 lossy_tier: bool = False, keyframe_every: int = 8):
         self.cfg = cfg
         self.mesh = mesh
-        self.checkpoint_every = checkpoint_every
+        # ``commit_every`` is the continuous-checkpointing cadence knob
+        # (DESIGN.md §15) — it overrides the legacy checkpoint_every name
+        self.checkpoint_every = (commit_every if commit_every is not None
+                                 else checkpoint_every)
         self.on_metrics = on_metrics
         self.pipeline = SyntheticPipeline(cfg, batch=batch, seq=seq, mesh=mesh,
                                           seed=seed)
@@ -41,18 +46,25 @@ class Trainer:
             compress_grads=compress_grads), donate_argnums=(0,))
         self.state = init_state(cfg, seed, compress_grads=compress_grads)
         self.timer = StepTimer()
-        self.policy = StragglerPolicy()
         self.ckpt: Optional[CheckpointManager] = None
         self.start_step = 0
         if checkpoint_dir is not None:
-            self.ckpt = CheckpointManager(checkpoint_dir,
-                                          model_name=cfg.name)
+            self.ckpt = CheckpointManager(
+                checkpoint_dir, model_name=cfg.name,
+                tier="lossy" if lossy_tier else "exact",
+                keyframe_every=keyframe_every)
             latest = self.ckpt.latest_step()
             if latest is not None:  # crash restart: resume from last commit
-                self.state, _ = self.ckpt.restore(step=latest,
-                                                  template=self.state)
-                self.start_step = latest
-                self.pipeline.step = latest
+                # the lossy tier may resolve to the nearest exact ancestor,
+                # so resume from the step restore actually returned
+                self.state, restored = self.ckpt.restore(step=latest,
+                                                         template=self.state)
+                self.start_step = restored
+                self.pipeline.step = restored
+        # straggler escalation bottoms out in evict + elastic restart from
+        # the last committed version (ft/straggler.py) when versioning is on
+        self.elastic = ElasticRestart(self) if self.ckpt is not None else None
+        self.policy = StragglerPolicy(evict_fn=self.elastic)
 
     def run(self, n_steps: int) -> Dict[str, list]:
         history: Dict[str, list] = {"loss": [], "step_time": []}
