@@ -1,0 +1,327 @@
+"""Hub under production load: mixed traffic with GC + compaction live,
+read-replica fan-out, and worker-pool saturation (DESIGN.md §16).
+
+Phases, all against one multi-tenant :class:`HubService` on loopback:
+
+1. **mixed workload** — writer threads push finetune chains into several
+   tenants while reader threads pull them back and verify **bit identity**;
+   a maintenance thread runs orphan GC + pack compaction the whole time; a
+   read replica mirrors the primary and a ``ReplicaSetTransport`` client
+   fans its reads across it. Per-op p50/p99 latencies are reported.
+2. **GC under live traffic** — a scratch tenant with strictly private
+   payload is deleted mid-traffic; maintenance cycles must reclaim at
+   least those private bytes without a single bit-identity failure.
+3. **saturation** — a thread storm against a deliberately small worker
+   pool; reports sustained 200-throughput and the shed (503) rate, and
+   requires zero 500s.
+
+Exit is non-zero if any invariant fails: bit-identity, fsck-clean primary
+AND replica, reclaim floor, zero 500s. Writes ``BENCH_PR10.json``.
+
+Usage: ``PYTHONPATH=src:. python -m benchmarks.bench_hub_load [--smoke]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import http.client
+import json
+import statistics
+import sys
+import tempfile
+import threading
+import time
+from typing import Dict, List
+from urllib.parse import urlsplit
+
+import numpy as np
+
+from benchmarks.pools import base_model, finetune
+from repro.core import LineageGraph
+from repro.hub import HubService, start_in_thread
+from repro.hub.replica import ReplicaHub, ReplicaSetTransport
+from repro.remote import HttpTransport, RemoteState, pull, push
+from repro.store import ArtifactStore
+
+TENANTS = ("alpha", "beta", "gamma", "delta")
+
+
+def _repo(path: str) -> LineageGraph:
+    return LineageGraph(path=path, store=ArtifactStore(root=path))
+
+
+def _pct(samples: List[float], q: float) -> float:
+    if not samples:
+        return 0.0
+    s = sorted(samples)
+    return s[min(len(s) - 1, int(q * len(s)))]
+
+
+def _verify_pull(src: LineageGraph, dst: LineageGraph, names) -> int:
+    bad = 0
+    for name in names:
+        a = src.store.load_artifact(src.nodes[name].artifact_ref)
+        b = dst.store.load_artifact(dst.nodes[name].artifact_ref)
+        for k in a.params:
+            if not np.array_equal(np.asarray(a.params[k]),
+                                  np.asarray(b.params[k])):
+                bad += 1
+    return bad
+
+
+def run(smoke: bool = False) -> Dict:
+    writers = 4 if smoke else 8
+    chain = 2 if smoke else 4
+    d = 64 if smoke else 128
+    storm_threads = 24 if smoke else 64
+    storm_s = 2.0 if smoke else 6.0
+
+    out: Dict = {"mode": "smoke" if smoke else "full"}
+    errors: List[str] = []
+    lat: Dict[str, List[float]] = {"push": [], "pull": []}
+    lat_lock = threading.Lock()
+    bit_failures = [0]
+
+    with tempfile.TemporaryDirectory() as tmp:
+        service = HubService(f"{tmp}/hub")
+        server, _ = start_in_thread(service, max_workers=16, queue_depth=64)
+        replica = ReplicaHub(f"{tmp}/replica", server.url)
+        rserver, _ = start_in_thread(replica.service)
+
+        stop = threading.Event()
+        maint_stats = {"gc_runs": 0, "reclaimed": 0, "compactions": 0}
+
+        def maintenance():
+            while not stop.is_set():
+                try:
+                    rep = service.run_gc()
+                    maint_stats["gc_runs"] += 1
+                    maint_stats["reclaimed"] += rep["reclaimed_bytes"]
+                    if service.compact()["ran"]:
+                        maint_stats["compactions"] += 1
+                    replica.sync_once()
+                except Exception as exc:  # noqa: BLE001 - recorded, not fatal
+                    errors.append(f"maintenance: {exc}")
+                stop.wait(0.1)
+
+        def writer(i: int) -> None:
+            tenant = TENANTS[i % len(TENANTS)]
+            try:
+                g = _repo(f"{tmp}/w{i}")
+                art = base_model(seed=i, n_layers=3, d=d)
+                g.add_node(art, f"w{i}@v1")
+                for v in range(2, chain + 2):
+                    art = finetune(art, seed=100 * i + v)
+                    g.add_node(art, f"w{i}@v{v}")
+                t = HttpTransport(f"{server.url}/r/{tenant}",
+                                  retries=6, backoff=0.05)
+                t0 = time.perf_counter()
+                push(g, t, state=RemoteState(g.path, "origin"))
+                with lat_lock:
+                    lat["push"].append(time.perf_counter() - t0)
+                # read back through the replica set (stale -> primary)
+                rs = ReplicaSetTransport(
+                    HttpTransport(f"{server.url}/r/{tenant}",
+                                  retries=6, backoff=0.05),
+                    [HttpTransport(f"{rserver.url}/r/{tenant}",
+                                   retries=2, backoff=0.05)])
+                g2 = _repo(f"{tmp}/r{i}")
+                t0 = time.perf_counter()
+                pull(g2, rs)
+                with lat_lock:
+                    lat["pull"].append(time.perf_counter() - t0)
+                bad = _verify_pull(
+                    g, g2, [f"w{i}@v{v}" for v in range(1, chain + 2)])
+                with lat_lock:
+                    bit_failures[0] += bad
+                    out["replica_reads"] = (out.get("replica_reads", 0)
+                                            + rs.replica_reads)
+                    out["replica_fallbacks"] = (out.get("replica_fallbacks", 0)
+                                                + rs.fallbacks)
+            except Exception as exc:  # noqa: BLE001
+                errors.append(f"writer {i}: {exc}")
+
+        # -- phase 1+2: mixed workload with maintenance + replica live -------
+        maint = threading.Thread(target=maintenance, daemon=True)
+        maint.start()
+
+        # scratch tenant whose private bytes must be reclaimed once deleted
+        gs = _repo(f"{tmp}/scratch")
+        gs.add_node(base_model(seed=991, n_layers=3, d=d, prefix="S"),
+                    "scratch@v1")
+        push(gs, HttpTransport(f"{server.url}/r/scratch",
+                               retries=6, backoff=0.05),
+             state=RemoteState(gs.path, "origin"))
+        cas = service.store.cas
+        scratch_keys = set(
+            service.store.expected_refcounts(
+                service.repo("scratch").roots()))
+        shared = set()
+        for name in service.repo_names():
+            if name != "scratch":
+                shared |= set(service.store.expected_refcounts(
+                    service.repo(name).roots()))
+        private = scratch_keys - shared
+        private_bytes = sum(cas.size(k) for k in private if cas.has(k))
+
+        t_phase = time.perf_counter()
+        threads = [threading.Thread(target=writer, args=(i,))
+                   for i in range(writers)]
+        for t in threads:
+            t.start()
+        service.delete_repo("scratch")          # GC target, mid-traffic
+        for t in threads:
+            t.join()
+        mixed_s = time.perf_counter() - t_phase
+
+        # the deleted tenant must be reclaimed BY THE LIVE maintenance loop,
+        # while worker traffic is (or was just) in flight — that is the §16
+        # acceptance; the post-stop cycle only mops up writer debris
+        deadline = time.time() + (10 if smoke else 30)
+        while (maint_stats["reclaimed"] < private_bytes
+               and time.time() < deadline):
+            time.sleep(0.1)
+        out["reclaimed_live_bytes"] = maint_stats["reclaimed"]
+        stop.set()
+        maint.join(10)
+        rep = service.run_gc(grace=0, confirm_cycles=1)
+        maint_stats["reclaimed"] += rep["reclaimed_bytes"]
+        replica.sync_once()                     # converge the mirror
+
+        # -- phase 3: saturation storm ---------------------------------------
+        host = urlsplit(server.url)
+        codes: Dict[int, int] = {}
+        codes_lock = threading.Lock()
+        t_storm = time.perf_counter()
+
+        def storm():
+            end = t_storm + storm_s
+            while time.perf_counter() < end:
+                try:
+                    conn = http.client.HTTPConnection(host.hostname,
+                                                      host.port, timeout=10)
+                    conn.request("GET", "/api/ping")
+                    resp = conn.getresponse()
+                    resp.read()
+                    with codes_lock:
+                        codes[resp.status] = codes.get(resp.status, 0) + 1
+                    conn.close()
+                except OSError:
+                    with codes_lock:
+                        codes[-1] = codes.get(-1, 0) + 1
+
+        storm_pool = [threading.Thread(target=storm)
+                      for _ in range(storm_threads)]
+        for t in storm_pool:
+            t.start()
+        for t in storm_pool:
+            t.join()
+        storm_elapsed = time.perf_counter() - t_storm
+
+        # -- phase 4: forced overload against a deliberately tiny pool -------
+        # same service, second listener: 4 slots + simulated 20ms RTT, so a
+        # 24-thread storm MUST shed — proves 503 + Retry-After under
+        # saturation rather than unbounded queueing
+        small, _ = start_in_thread(service, max_workers=2, queue_depth=2)
+        small.delay_s = 0.02
+        shost = urlsplit(small.url)
+        shed_codes: Dict[int, int] = {}
+
+        def shed_storm():
+            end = time.perf_counter() + 1.0
+            while time.perf_counter() < end:
+                try:
+                    conn = http.client.HTTPConnection(shost.hostname,
+                                                      shost.port, timeout=10)
+                    conn.request("GET", "/api/ping")
+                    resp = conn.getresponse()
+                    resp.read()
+                    with codes_lock:
+                        shed_codes[resp.status] = \
+                            shed_codes.get(resp.status, 0) + 1
+                    conn.close()
+                except OSError:
+                    with codes_lock:
+                        shed_codes[-1] = shed_codes.get(-1, 0) + 1
+
+        shed_pool = [threading.Thread(target=shed_storm) for _ in range(24)]
+        for t in shed_pool:
+            t.start()
+        for t in shed_pool:
+            t.join()
+        small.shutdown()
+        small.server_close()
+
+        stats = service.default.stats
+        fsck_primary = service.fsck()
+        fsck_replica = replica.service.fsck()
+
+        out.update({
+            "writers": writers,
+            "mixed_workload_s": round(mixed_s, 3),
+            "push_p50_s": round(_pct(lat["push"], 0.50), 4),
+            "push_p99_s": round(_pct(lat["push"], 0.99), 4),
+            "pull_p50_s": round(_pct(lat["pull"], 0.50), 4),
+            "pull_p99_s": round(_pct(lat["pull"], 0.99), 4),
+            "gc": {
+                "runs": maint_stats["gc_runs"],
+                "bytes_reclaimed": maint_stats["reclaimed"],
+                "reclaim_floor_bytes": private_bytes,
+                "compactions": maint_stats["compactions"],
+            },
+            "saturation": {
+                "threads": storm_threads,
+                "seconds": round(storm_elapsed, 3),
+                "ok_per_s": round(codes.get(200, 0) / storm_elapsed, 1),
+                "shed_503": codes.get(503, 0),
+                "conn_errors": codes.get(-1, 0),
+            },
+            "overload": {
+                "served_200": shed_codes.get(200, 0),
+                "shed_503": shed_codes.get(503, 0),
+                "conn_errors": shed_codes.get(-1, 0),
+            },
+            "bit_identity_failures": bit_failures[0],
+            "errors_500": stats["errors_500"],
+            "sheds_503_total": stats["sheds_503"],
+            "fsck_primary_ok": bool(fsck_primary["ok"]),
+            "fsck_replica_ok": bool(fsck_replica["ok"]),
+            "worker_errors": errors,
+        })
+
+        server.shutdown()
+        server.server_close()
+        rserver.shutdown()
+        rserver.server_close()
+
+    ok = (not errors
+          and bit_failures[0] == 0
+          and out["errors_500"] == 0
+          and out["fsck_primary_ok"] and out["fsck_replica_ok"]
+          and maint_stats["reclaimed"] >= private_bytes
+          and codes.get(200, 0) > 0
+          and shed_codes.get(200, 0) > 0
+          and shed_codes.get(503, 0) > 0)
+    out["ok"] = ok
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small fast run for CI (hub-load-smoke job)")
+    ap.add_argument("--out", default="BENCH_PR10.json")
+    args = ap.parse_args(argv)
+    report = run(smoke=args.smoke)
+    print(json.dumps(report, indent=1))
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"wrote {args.out}")
+    if not report["ok"]:
+        print("FAIL: hub load invariants violated", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

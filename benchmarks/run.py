@@ -8,7 +8,9 @@ throughput, warm/cold checkout latency, dedup ratio) and
 ``BENCH_PR7.json`` (serving resident density, hot-swap latency) and
 ``BENCH_PR8.json`` (observability overhead: disabled-path commit cost) and
 ``BENCH_PR9.json`` (continuous checkpointing: overhead per cadence/tier,
-bytes/step vs full snapshots).
+bytes/step vs full snapshots) and
+``BENCH_PR10.json`` (hub under load: live-traffic GC reclaim, replica
+reads, saturation throughput and 503 shed rate).
 Usage: PYTHONPATH=src python -m benchmarks.run
 """
 
@@ -252,6 +254,21 @@ def main() -> None:
     with open("BENCH_PR9.json", "w") as f:
         json.dump(ck, f, indent=1)
     print("wrote BENCH_PR9.json")
+
+    print("=" * 72)
+    print("§16 hub under production load — GC live, replicas, saturation")
+    print("=" * 72)
+    from benchmarks import bench_hub_load
+    hub = bench_hub_load.run(smoke=True)
+    _csv("hub_load", hub["push_p50_s"] * 1e6,
+         f"ok={hub['ok']},"
+         f"reclaimed={hub['gc']['bytes_reclaimed']}"
+         f"/floor={hub['gc']['reclaim_floor_bytes']},"
+         f"sat_ok_per_s={hub['saturation']['ok_per_s']},"
+         f"shed_503={hub['overload']['shed_503']}")
+    with open("BENCH_PR10.json", "w") as f:
+        json.dump(hub, f, indent=1)
+    print("wrote BENCH_PR10.json")
 
     print("=" * 72)
     print("Roofline (from dry-run artifact, single-pod) — see EXPERIMENTS.md")

@@ -238,20 +238,40 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("rest", nargs=argparse.REMAINDER, metavar="CMD",
                    help="mgit command to run under tracing (trace action; "
                         "default: a checkout sweep of every stored node)")
-    p = sub.add_parser("hub", help="model-hub daemon (DESIGN.md §11)")
-    p.add_argument("action", choices=["serve", "stats"])
+    p = sub.add_parser("hub", help="model-hub daemon (DESIGN.md §11, §16)")
+    p.add_argument("action",
+                   choices=["serve", "stats", "gc", "compact", "replica"])
     p.add_argument("url", nargs="?",
-                   help="hub url (stats action only)")
+                   help="hub url (stats/gc/compact actions; omitted = run "
+                        "gc/compact offline over the -C repo)")
     p.add_argument("--host", default="127.0.0.1",
-                   help="bind address for hub serve")
+                   help="bind address for hub serve / hub replica")
     p.add_argument("--port", type=int, default=8943,
-                   help="bind port for hub serve (0 picks an ephemeral one)")
+                   help="bind port for hub serve / hub replica (0 picks an "
+                        "ephemeral one)")
     p.add_argument("--token", default=None,
                    help="bearer token: required of clients (serve) / sent "
                         "to the hub (stats; also $MGIT_HUB_TOKEN)")
     p.add_argument("--allow-quarantined", action="store_true",
                    help="accept pushed nodes flagged quarantined instead of "
                         "rejecting them server-side")
+    p.add_argument("--max-workers", type=int, default=None, metavar="N",
+                   help="request worker-pool size (serve/replica; 0 = "
+                        "unbounded thread-per-request compat mode)")
+    p.add_argument("--queue-depth", type=int, default=None, metavar="N",
+                   help="accepted-but-unserviced request backlog before the "
+                        "hub sheds load with 503 + Retry-After")
+    p.add_argument("--confirm-cycles", type=int, default=2, metavar="N",
+                   help="hub gc: orphan confirmation cycles (1 = reclaim "
+                        "on first sight; offline use only)")
+    p.add_argument("--grace", type=int, default=1, metavar="N",
+                   help="hub gc: cycles an imported-but-unpublished object "
+                        "is protected from candidacy")
+    p.add_argument("--primary", default=None, metavar="URL",
+                   help="hub replica: primary hub to mirror (required)")
+    p.add_argument("--sync-interval", type=float, default=5.0, metavar="S",
+                   help="hub replica: seconds between mirror passes (0 = "
+                        "sync only on POST /api/replica/sync)")
     p = sub.add_parser("serve",
                        help="lineage-native inference daemon (DESIGN.md "
                             "§13): one resident base, hot-swappable "
@@ -523,20 +543,62 @@ def _cmd_obs(args) -> int:
 
 
 def _cmd_hub(args) -> int:
-    """`hub serve` (blocking daemon over -C repo) / `hub stats <url>`."""
+    """`hub serve|stats|gc|compact|replica` (DESIGN.md §11, §16)."""
+    pool_kw = {}
+    if args.max_workers is not None:
+        pool_kw["max_workers"] = args.max_workers
+    if args.queue_depth is not None:
+        pool_kw["queue_depth"] = args.queue_depth
     if args.action == "serve":
-        from repro.hub import HubApp, make_server
-        app = HubApp(args.repo, token=args.token,
-                     allow_quarantined=args.allow_quarantined)
-        server = make_server(app, host=args.host, port=args.port)
-        print(f"mgit hub: serving {app.root} at {server.url}"
-              + (" [token auth]" if app.auth.enabled else ""), flush=True)
+        from repro.hub import HubService, make_server
+        service = HubService(args.repo, token=args.token,
+                             allow_quarantined=args.allow_quarantined)
+        server = make_server(service, host=args.host, port=args.port,
+                             **pool_kw)
+        names = ", ".join(service.repo_names())
+        print(f"mgit hub: serving {service.root} at {server.url} "
+              f"(repos: {names})"
+              + (" [token auth]" if service.auth.enabled else ""), flush=True)
         try:
             server.serve_forever()
         except KeyboardInterrupt:
             pass
         finally:
             server.server_close()
+        return 0
+    if args.action == "replica":
+        if not args.primary:
+            print("usage: hub replica --primary URL [-C replica-dir]")
+            return 1
+        from repro.hub.replica import serve_replica
+        replica, server, _ = serve_replica(
+            args.repo, args.primary, token=args.token,
+            host=args.host, port=args.port,
+            sync_interval_s=args.sync_interval)
+        print(f"mgit hub replica: mirroring {args.primary} into "
+              f"{replica.service.root} at {server.url}", flush=True)
+        try:
+            server.serve_forever()
+        except KeyboardInterrupt:
+            pass
+        finally:
+            server.server_close()
+        return 0
+    if args.action in ("gc", "compact"):
+        if args.url:  # remote: ask a live hub to run its maintenance
+            from repro.remote.http import HttpTransport
+            tr = HttpTransport(args.url, token=args.token)
+            report = (tr.run_gc(confirm_cycles=args.confirm_cycles,
+                                grace=args.grace)
+                      if args.action == "gc" else tr.run_compact())
+        else:  # offline: the hub dir with no live traffic -> no fences
+            from repro.hub import HubService
+            from repro.hub.gc import run_compaction, run_gc
+            service = HubService(args.repo, allow_quarantined=True)
+            report = (run_gc(service, confirm_cycles=args.confirm_cycles,
+                             grace=args.grace)
+                      if args.action == "gc" else run_compaction(service))
+        print(json.dumps(report, indent=1))
         return 0
     if not args.url:
         print("usage: hub stats <url>")

@@ -1,20 +1,25 @@
-"""MGit model hub: a threaded HTTP daemon serving one repository.
+"""MGit model hub: a worker-pool HTTP daemon serving one or many repositories.
 
-The multi-user face of the system (paper §5 collaboration; DESIGN.md §11):
-:class:`HubApp` wraps a repo directory's :class:`ArtifactStore` + lineage
-document with concurrent-push safety (optimistic lineage swap -> HTTP 409),
-server-side quarantine policy and live stats; :mod:`repro.hub.routes`
-exposes it over a small REST surface that
+The multi-user face of the system (paper §5 collaboration; DESIGN.md §11,
+§16): :class:`HubApp` wraps a repo's lineage document + transfer journal
+with concurrent-push safety (optimistic lineage swap -> HTTP 409) and
+server-side quarantine policy; :class:`HubService` scales that to many
+repos over one shared CAS (cross-repo dedup, union-root refcounts,
+orphan GC via :mod:`repro.hub.gc`); :mod:`repro.hub.replica` adds
+read-replica hubs and a replica-aware client transport.
+:mod:`repro.hub.routes` exposes it all over a small REST surface that
 :class:`repro.remote.http.HttpTransport` speaks from the client side, so
-``push``/``pull``/``clone`` work unchanged against ``http://`` remotes.
+``push``/``pull``/``clone`` work unchanged against ``http://`` remotes —
+including repo-scoped ``http://hub/r/<name>`` URLs.
 
 Start one with ``mgit hub serve`` or embed via :func:`start_in_thread`.
 """
 
-from repro.hub.app import HubApp
+from repro.hub.app import HubApp, HubService, ReadOnlyRepo
 from repro.hub.auth import TokenAuth
 from repro.hub.routes import (HubRequestHandler, HubServer, make_server,
                               start_in_thread)
 
-__all__ = ["HubApp", "TokenAuth", "HubRequestHandler", "HubServer",
-           "make_server", "start_in_thread"]
+__all__ = ["HubApp", "HubService", "ReadOnlyRepo", "TokenAuth",
+           "HubRequestHandler", "HubServer", "make_server",
+           "start_in_thread"]

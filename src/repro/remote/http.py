@@ -397,3 +397,41 @@ class HttpTransport(Transport):
         status, _, data = self._request("GET", "/api/stats")
         self._check_auth(status, "/api/stats")
         return self._json(data)
+
+    def list_repos(self) -> List[Dict]:
+        """Tenants of a multi-tenant hub: ``[{"name", "etag"}, ...]``.
+
+        A single-repo hub answers with its sole ``default`` entry, so
+        replica sync (§16.5) iterates the same way against either."""
+        status, _, data = self._request("GET", "/api/repos")
+        self._check_auth(status, "/api/repos")
+        if status != 200:
+            raise HubUnavailable(f"repo list failed: {status}")
+        return self._json(data).get("repos", [])
+
+    def run_gc(self, confirm_cycles: int = 2, grace: int = 1) -> Dict:
+        """Trigger one maintenance GC cycle on a live hub (§16.3)."""
+        status, _, data = self._request(
+            "POST", "/api/gc", json_body={"confirm_cycles": confirm_cycles,
+                                          "grace": grace})
+        self._check_auth(status, "/api/gc")
+        if status != 200:
+            raise HubUnavailable(f"gc failed: {status} {data[:200]!r}")
+        return self._json(data)
+
+    def run_compact(self) -> Dict:
+        """Trigger aggressive pack compaction on a live hub (§16.3)."""
+        status, _, data = self._request("POST", "/api/compact", json_body={})
+        self._check_auth(status, "/api/compact")
+        if status != 200:
+            raise HubUnavailable(f"compact failed: {status} {data[:200]!r}")
+        return self._json(data)
+
+    def replica_sync(self) -> Dict:
+        """Trigger an on-demand mirror pass on a replica hub (§16.5)."""
+        status, _, data = self._request("POST", "/api/replica/sync",
+                                        json_body={})
+        self._check_auth(status, "/api/replica/sync")
+        if status != 200:
+            raise HubUnavailable(f"replica sync failed: {status}")
+        return self._json(data)

@@ -151,7 +151,10 @@ def resolve_transport(repo: str, name_or_url: str
                       ) -> Tuple[Transport, Optional[str]]:
     """A configured remote name resolves through ``remotes.json`` (and gets
     tracking state); a bare path or ``http(s)://`` url is used directly
-    (stateless sync)."""
+    (stateless sync); an already-constructed :class:`Transport` (e.g. a
+    :class:`~repro.hub.replica.ReplicaSetTransport`) passes through."""
+    if isinstance(name_or_url, Transport):
+        return name_or_url, None
     remotes = remote_list(repo)
     if name_or_url in remotes:
         return _transport_for(remotes[name_or_url]), name_or_url

@@ -80,6 +80,7 @@ from typing import Any, Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
 
+from repro.common.faults import kill_point
 from repro.common.hashing import bytes_hash, tensor_hash
 
 _REC_HEAD = struct.Struct("<HI")  # (keylen, datalen)
@@ -156,6 +157,13 @@ class CAS:
         self._batch_handles: Dict[int, Any] = {}
         # pooled mmap views keyed by file path -> (mmap, mapped_size)
         self._mmap_pool: "OrderedDict[str, Tuple[mmap.mmap, int]]" = OrderedDict()
+        # reader leases (DESIGN.md §16.2): while pins are held, gc() performs
+        # logical deletes only — physical reclaim and pack compaction are
+        # deferred until the last pin releases, so an in-flight ranged read
+        # or mget stream can never observe a reclaimed object.
+        self._pins = 0
+        self._deferred_dead: Dict[str, int] = {}   # key -> payload bytes
+        self._gc_epoch = 0
         if root is not None:
             os.makedirs(os.path.join(root, "objects"), exist_ok=True)
             os.makedirs(os.path.join(root, "packs"), exist_ok=True)
@@ -595,38 +603,135 @@ class CAS:
                 self._defer_persist -= 1
                 self._persist_refcounts()
 
+    @contextlib.contextmanager
+    def pin(self):
+        """Reader lease (DESIGN.md §16.2).
+
+        While any pin is held, :meth:`gc` only *logically* deletes dead
+        objects (drops their refcount entries) — their bytes stay readable
+        in packs/loose files, and pack compaction is deferred — so a reader
+        that resolved keys before gc ran can finish its ranged reads/mget
+        stream against a consistent store. The last pin release performs
+        the deferred physical reclaim, re-checking refcounts first: a key
+        re-put and re-referenced during the deferral window (resurrection)
+        is kept."""
+        with self._lock:
+            self._pins += 1
+        try:
+            yield
+        finally:
+            with self._lock:
+                self._pins -= 1
+                if self._pins == 0 and self._deferred_dead:
+                    self._reclaim_deferred_locked()
+
+    @property
+    def pins(self) -> int:
+        with self._lock:
+            return self._pins
+
+    @property
+    def gc_epoch(self) -> int:
+        """Monotonic counter bumped by every :meth:`gc` call. Readers that
+        snapshot it before resolving keys can detect a concurrent gc and
+        abort-and-retry instead of trusting stale offsets."""
+        with self._lock:
+            return self._gc_epoch
+
+    def deferred_dead_bytes(self) -> int:
+        """Bytes logically dead but physically retained for active pins."""
+        with self._lock:
+            return sum(self._deferred_dead.values())
+
+    def _object_size_locked(self, key: str) -> int:
+        if self.root is None:
+            return len(self._mem.get(key, b""))
+        ent = self._pack_index.get(key)
+        if ent is not None:
+            return ent[2]
+        p = self._obj_path(key)
+        return os.path.getsize(p) if os.path.exists(p) else 0
+
+    def _reclaim_one_locked(self, key: str) -> int:
+        """Physically remove one object; returns payload bytes reclaimed."""
+        if self.root is None:
+            blob = self._mem.pop(key, None)
+            if blob is None:
+                return 0
+            self._physical_bytes -= len(blob)
+            self._object_count -= 1
+            return len(blob)
+        if key in self._pack_index:
+            pid, _, length = self._pack_index.pop(key)
+            self._pack_dead[pid] = self._pack_dead.get(pid, 0) + length
+            self._object_count -= 1
+            return length
+        p = self._obj_path(key)
+        if os.path.exists(p):
+            n = os.path.getsize(p)
+            self._physical_bytes -= n
+            self._object_count -= 1
+            os.remove(p)
+            return n
+        return 0
+
+    def _reclaim_deferred_locked(self) -> int:
+        reclaimed = 0
+        for k in list(self._deferred_dead):
+            self._deferred_dead.pop(k)
+            if self.refcounts.get(k, 0) > 0:
+                continue  # resurrected during the deferral window
+            reclaimed += self._reclaim_one_locked(k)
+        self._compact_packs()
+        self._persist_refcounts()
+        self._persist_pack_index()
+        return reclaimed
+
     def gc(self) -> int:
-        """Delete unreferenced objects; returns bytes reclaimed."""
+        """Delete unreferenced objects; returns bytes reclaimed.
+
+        Under active :meth:`pin` leases the dead set is removed from the
+        refcount table immediately (unreachable to new readers that consult
+        refcounts) but physical removal is deferred to the last pin release;
+        the returned byte count includes deferred bytes — they are committed
+        for reclaim and cannot be resurrected except by an explicit re-put."""
         reclaimed = 0
         with self._lock:
+            kill_point("cas.gc.pre_reclaim")
             dead = [k for k, c in self.refcounts.items() if c <= 0]
+            pinned = self._pins > 0
             for k in dead:
-                if self.root is None:
-                    blob = self._mem.pop(k, None)
-                    if blob is not None:
-                        reclaimed += len(blob)
-                        self._physical_bytes -= len(blob)
-                        self._object_count -= 1
-                elif k in self._pack_index:
-                    pid, _, length = self._pack_index.pop(k)
-                    self._pack_dead[pid] = self._pack_dead.get(pid, 0) + length
-                    reclaimed += length
-                    self._object_count -= 1
-                else:
-                    p = self._obj_path(k)
-                    if os.path.exists(p):
-                        n = os.path.getsize(p)
-                        reclaimed += n
-                        self._physical_bytes -= n
-                        self._object_count -= 1
-                        os.remove(p)
                 del self.refcounts[k]
-            self._compact_packs()
+                if pinned:
+                    size = self._object_size_locked(k)
+                    self._deferred_dead[k] = size
+                    reclaimed += size
+                else:
+                    reclaimed += self._reclaim_one_locked(k)
+            if not pinned:
+                self._compact_packs()
+            self._gc_epoch += 1
             self._persist_refcounts()
             self._persist_pack_index()
         return reclaimed
 
-    def _compact_packs(self) -> None:
+    def compact(self, aggressive: bool = False) -> bool:
+        """Explicit pack compaction (the hub maintenance entry point).
+
+        ``aggressive=True`` rewrites every pack carrying ANY dead payload,
+        not just those past the half-dead threshold. Refuses (returns
+        False) while reader leases are pinned: compaction moves index
+        entries between packs, and an in-flight mget preflight must see a
+        stable index — the caller retries after the leases drain."""
+        with self._lock:
+            if self._pins > 0:
+                return False
+            self._compact_packs(aggressive=aggressive)
+            self._persist_refcounts()
+            self._persist_pack_index()
+            return True
+
+    def _compact_packs(self, aggressive: bool = False) -> None:
         """Rewrite packs whose dead payload exceeds half their size.
 
         Crash-safe ordering: live records are COPIED into the active pack and
@@ -638,7 +743,7 @@ class CAS:
             return
         for pid, dead_bytes in list(self._pack_dead.items()):
             size = self._pack_sizes.get(pid, 0)
-            if dead_bytes <= 0 or dead_bytes * 2 < size:
+            if dead_bytes <= 0 or (not aggressive and dead_bytes * 2 < size):
                 continue
             live = {k: e for k, e in self._pack_index.items() if e[0] == pid}
             path = self._pack_path(pid)
@@ -779,8 +884,11 @@ class CAS:
             present_set = set(present)
             dangling = sorted(k for k, c in self.refcounts.items()
                               if c > 0 and k not in present_set)
+            # keys logically gc'd but physically retained for an active pin
+            # are accounted-for, not untracked drift
             untracked = sorted(k for k in present_set
-                               if k not in self.refcounts)
+                               if k not in self.refcounts
+                               and k not in self._deferred_dead)
             return {
                 "objects_checked": len(present),
                 "corrupt": corrupt,

@@ -1,0 +1,13 @@
+"""Shared fixtures: kill-point hygiene for the fault-injection harness."""
+
+import pytest
+
+from repro.common import faults
+
+
+@pytest.fixture(autouse=True)
+def _disarm_kill_points():
+    """No kill-point armed by one test may survive into the next — a leaked
+    arm turns an unrelated later test into a heisenbug."""
+    yield
+    faults.disarm_all()

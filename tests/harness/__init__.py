@@ -1,0 +1,30 @@
+"""Deterministic fault-injection toolkit for hub/store tests (DESIGN.md §16.6).
+
+Three layers, composable per scenario:
+
+* **kill-point helpers** (:mod:`harness.faults`) — context managers over
+  :mod:`repro.common.faults` that arm a named production seam to crash
+  (:func:`crash_at`) or run a competing operation in the hitting thread
+  (:func:`callback_at`), and disarm on exit even when the test fails;
+* **fault transports** (:mod:`harness.transports`) — transport subclasses
+  injecting races and connection drops at client-visible seams
+  (``RacingTransport``/``FlakyHttpTransport``, ported from their original
+  inline homes in test_hub_http.py), plus ``AppTransport``, an in-process
+  socketless Transport over a HubApp for fast deterministic sequences;
+* **invariant checks** (:mod:`harness.invariants`) — the assertions every
+  fault scenario must end with: fsck clean, refcounts exactly equal to an
+  expected-replay, heads bit-identical.
+"""
+
+from harness.faults import (KillPointError, callback_at, crash_at,
+                            disarm_all, fired)
+from harness.invariants import (assert_bit_identical, check_refcounts,
+                                check_service)
+from harness.transports import (AppTransport, FlakyHttpTransport,
+                                RacingTransport)
+
+__all__ = [
+    "KillPointError", "crash_at", "callback_at", "disarm_all", "fired",
+    "AppTransport", "FlakyHttpTransport", "RacingTransport",
+    "assert_bit_identical", "check_refcounts", "check_service",
+]

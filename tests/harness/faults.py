@@ -1,0 +1,41 @@
+"""pytest-facing wrappers over the production kill-point registry.
+
+The registry itself lives in :mod:`repro.common.faults` (it must import
+from production code). These helpers add the two things tests want on
+top: scoped arming that cannot leak into the next test, and readable
+names for the two firing modes."""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Callable, Iterator, Optional
+
+from repro.common import faults as _faults
+
+KillPointError = _faults.KillPointError
+fired = _faults.fired
+disarm_all = _faults.disarm_all
+
+
+@contextlib.contextmanager
+def crash_at(name: str, after: int = 0, count: int = 1) -> Iterator[None]:
+    """Arm ``name`` to raise :class:`KillPointError` on its next ``count``
+    hits (after skipping ``after``), disarming on exit either way."""
+    _faults.arm(name, after=after, count=count)
+    try:
+        yield
+    finally:
+        _faults.disarm(name)
+
+
+@contextlib.contextmanager
+def callback_at(name: str, callback: Callable[[], None], after: int = 0,
+                count: int = 1) -> Iterator[None]:
+    """Arm ``name`` to run ``callback`` in the hitting thread — the
+    deterministic replacement for hand-rolled sleep-based interleavings:
+    the competing operation executes at exactly the instrumented seam."""
+    _faults.arm(name, after=after, count=count, callback=callback)
+    try:
+        yield
+    finally:
+        _faults.disarm(name)

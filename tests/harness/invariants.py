@@ -1,0 +1,58 @@
+"""Post-fault invariant checks — the assertions every scenario ends with.
+
+A fault test that only checks "it didn't crash" proves nothing; these
+verify the §16 contract: the store is fsck-clean, the refcount table is
+*exactly* what a from-scratch replay of the surviving roots would build,
+and surviving heads are bit-identical to their source of truth."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence
+
+import numpy as np
+
+
+def check_refcounts(service, converged: bool = False) -> None:
+    """Reachable keys must carry exactly the expected-replay counts.
+
+    Unreachable-but-counted keys are legal mid-flight — in-flight imports
+    and orphans still waiting out their grace/confirmation cycles. With
+    ``converged=True`` (call it after a few quiescent maintenance cycles)
+    they must be gone too: that is the GC convergence guarantee."""
+    store = service.store
+    expected = {k: v for k, v in
+                store.expected_refcounts(service.all_roots()).items() if v > 0}
+    with store.cas._lock:
+        actual = {k: v for k, v in store.cas.refcounts.items() if v > 0}
+    reachable = {k: v for k, v in actual.items() if k in expected}
+    assert reachable == expected, (
+        f"refcount divergence on reachable keys: "
+        f"mismatched={[k for k in expected if reachable.get(k) != expected[k]][:5]} "
+        f"missing={sorted(set(expected) - set(reachable))[:5]}")
+    if converged:
+        stray = set(actual) - set(expected)
+        assert not stray, (
+            f"unreachable keys still counted after convergence: "
+            f"{sorted(stray)[:5]}")
+
+
+def check_service(service, converged: bool = False) -> Dict[str, Any]:
+    """Full §16 invariant bundle: fsck clean + exact refcounts."""
+    report = service.fsck()
+    assert report["ok"], report
+    assert not report.get("refcount_drift"), report
+    check_refcounts(service, converged=converged)
+    return report
+
+
+def assert_bit_identical(g1, g2,
+                         names: Optional[Sequence[str]] = None) -> None:
+    """Every named node's params load bit-for-bit equal from both graphs."""
+    for name in names or g1.nodes:
+        a = g1.store.load_artifact(g1.nodes[name].artifact_ref)
+        b = g2.store.load_artifact(g2.nodes[name].artifact_ref)
+        assert set(a.params) == set(b.params), name
+        for k in a.params:
+            x, y = np.asarray(a.params[k]), np.asarray(b.params[k])
+            assert x.dtype == y.dtype and x.shape == y.shape, (name, k)
+            assert np.array_equal(x, y), (name, k)

@@ -1,0 +1,102 @@
+"""Fault-injecting and in-process transports for hub tests.
+
+``RacingTransport`` and ``FlakyHttpTransport`` were born inline in
+test_hub_http.py (PR 5); they live here now so every suite can inject the
+same races. ``AppTransport`` is new: the full Transport interface over an
+in-process :class:`~repro.hub.app.HubApp`, so property tests and stress
+sequences can drive the real publish/import/finalize/GC code paths without
+sockets — deterministic and ~100x faster than loopback HTTP."""
+
+from __future__ import annotations
+
+import threading
+from typing import Dict, Mapping, Optional, Sequence, Set, Tuple
+
+from repro.remote.http import HttpTransport
+from repro.remote.transport import Transport
+
+
+class RacingTransport(HttpTransport):
+    """Injects a competing publish between our fetch and our publish —
+    the tightest interleaving the optimistic swap must survive."""
+
+    def __init__(self, url, app, racer_payload, **kw):
+        super().__init__(url, **kw)
+        self._app = app
+        self._racer_payload = racer_payload
+        self._raced = False
+
+    def publish_lineage(self, payload, expected=None):
+        if not self._raced:
+            self._raced = True
+            self._app.publish(self._racer_payload)  # the racer lands first
+        return super().publish_lineage(payload, expected=expected)
+
+
+class FlakyHttpTransport(HttpTransport):
+    """Connection drops after N successful object uploads."""
+
+    def __init__(self, url, fail_after=1, **kw):
+        super().__init__(url, **kw)
+        self.fail_after = fail_after
+        self._writes = 0
+        self._guard = threading.Lock()
+
+    def write_objects(self, objects):
+        with self._guard:
+            self._writes += 1
+            n = self._writes
+        if n > self.fail_after:
+            raise ConnectionError("simulated mid-push network drop")
+        super().write_objects(objects)
+
+
+class AppTransport(Transport):
+    """In-process Transport over a HubApp: same locks, same kill-points,
+    same refcount accounting as the HTTP path, minus the socket layer."""
+
+    def __init__(self, app) -> None:
+        self.app = app
+        self.url = f"app://{app.name}"
+
+    def ensure_repo(self) -> None:
+        pass
+
+    def fetch_lineage(self) -> Optional[Dict]:
+        return self.app.lineage()[0]
+
+    def fetch_lineage_versioned(self) -> Tuple[Optional[Dict], str]:
+        return self.app.lineage()
+
+    def publish_lineage(self, payload: Dict,
+                        expected: Optional[str] = None) -> Optional[Dict]:
+        return self.app.publish(payload, expected=expected)
+
+    def have(self, keys: Sequence[str]) -> Set[str]:
+        return set(self.app.have(keys))
+
+    def read_objects(self, keys: Sequence[str]) -> Dict[str, bytes]:
+        cas = self.app.store.cas
+        return {k: cas.get_bytes(k) for k in keys if cas.has(k)}
+
+    def object_sizes(self, keys: Sequence[str]) -> Optional[Dict[str, int]]:
+        sizes, _missing = self.app.object_sizes(keys)
+        return sizes
+
+    def write_objects(self, objects: Mapping[str, bytes]) -> None:
+        self.app.import_objects(dict(objects))
+
+    def finalize(self, roots: Sequence[str]) -> None:
+        self.app.finalize()
+
+    def journal_load(self, transfer_id: str) -> Optional[Dict]:
+        return self.app.journal.journal_load(transfer_id)
+
+    def journal_write(self, transfer_id: str, payload: Dict) -> None:
+        self.app.journal.journal_write(transfer_id, payload)
+
+    def journal_clear(self, transfer_id: str) -> None:
+        self.app.journal.journal_clear(transfer_id)
+
+    def journal_list(self) -> Sequence[str]:
+        return self.app.journal.journal_list()

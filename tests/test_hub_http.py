@@ -15,6 +15,7 @@ from repro.remote import (HttpTransport, LocalTransport, PublishConflict,
                           remote_add, remote_list, resolve_transport)
 from repro.store import ArtifactStore
 
+from harness import FlakyHttpTransport, RacingTransport
 from helpers import finetune_like, make_chain_model
 
 
@@ -180,23 +181,6 @@ def test_path_traversal_rejected(tmp_path, hub):
 # ---------------------------------------------------------------------------
 
 
-class RacingTransport(HttpTransport):
-    """Injects a competing publish between our fetch and our publish —
-    the tightest interleaving the optimistic swap must survive."""
-
-    def __init__(self, url, app, racer_payload, **kw):
-        super().__init__(url, **kw)
-        self._app = app
-        self._racer_payload = racer_payload
-        self._raced = False
-
-    def publish_lineage(self, payload, expected=None):
-        if not self._raced:
-            self._raced = True
-            self._app.publish(self._racer_payload)  # the racer lands first
-        return super().publish_lineage(payload, expected=expected)
-
-
 def test_publish_conflict_409_retries_and_merges(tmp_path, hub):
     app, url = hub
     g = _seed_repo(tmp_path / "src")
@@ -298,24 +282,6 @@ def test_same_node_divergence_converges_via_pull_merge_retry(tmp_path, hub):
 # ---------------------------------------------------------------------------
 # Interrupted HTTP push: journalled resume over the network
 # ---------------------------------------------------------------------------
-
-
-class FlakyHttpTransport(HttpTransport):
-    """Connection drops after N successful object uploads."""
-
-    def __init__(self, url, fail_after=1, **kw):
-        super().__init__(url, **kw)
-        self.fail_after = fail_after
-        self._writes = 0
-        self._guard = threading.Lock()
-
-    def write_objects(self, objects):
-        with self._guard:
-            self._writes += 1
-            n = self._writes
-        if n > self.fail_after:
-            raise ConnectionError("simulated mid-push network drop")
-        super().write_objects(objects)
 
 
 def test_interrupted_http_push_resumes_via_server_journal(tmp_path, hub):
